@@ -1,0 +1,10 @@
+"""Reproduction fidelity: every published claim of the paper, validated."""
+from __future__ import annotations
+
+from repro.core.claims import validate_all
+
+
+def run(emit):
+    for c in validate_all():
+        emit(f"claims/{c['claim']}", float(c["measured"]) * 1e6,
+             f"ok={c['ok']}|{c['expectation']}")

@@ -1,0 +1,42 @@
+"""Measured (wall-clock) decode/prefill/train microbenchmarks on the CPU
+container with reduced configs — sanity numbers for the harness itself, and
+the phase-latency decomposition measured (not simulated) end to end."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+
+
+def _time(fn, *args, n=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def run(emit):
+    opts = ModelOptions(remat=False)
+    for arch in ("smollm-135m", "granite-moe-3b-a800m", "mamba2-780m"):
+        cfg = get_config(arch).reduced()
+        params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
+                               jnp.float32)
+        B, S = 2, 32
+        tok = jnp.ones((B, S), jnp.int32)
+        _, caches = M.prefill(cfg, opts, params, {"tokens": tok}, 64,
+                              cache_dtype=jnp.float32)
+        one = jnp.ones((B, 1), jnp.int32)
+        decode = jax.jit(lambda p, t, c, i: M.decode_step(cfg, opts, p, t, c, i))
+        t = _time(decode, params, one, caches, S)
+        emit(f"micro/{arch}/decode_step", t * 1e6, f"B={B}")
+        prefill = jax.jit(lambda p, b: M.prefill(cfg, opts, p, b, 64,
+                                                 cache_dtype=jnp.float32))
+        t = _time(prefill, params, {"tokens": tok}, n=5)
+        emit(f"micro/{arch}/prefill_{S}", t * 1e6, f"B={B}")

@@ -1,0 +1,28 @@
+"""Paper Figure 2: MolmoAct-7B phase latency on Jetson Orin and Thor.
+
+Emits per-phase seconds + the headline ratios the paper reports (generation
+fraction ~75%, Thor/Orin e2e speedup ~1.4x, 200-300x off the 10 Hz target).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.hardware import ORIN, THOR
+from repro.core.xpu_sim import simulate_vla
+
+
+def run(emit):
+    cfg = get_config("molmoact-7b")
+    reports = {hw.name: simulate_vla(cfg, hw) for hw in (ORIN, THOR)}
+    for name, r in reports.items():
+        for phase, secs in r.phase_seconds().items():
+            emit(f"fig2/{name}/{phase}", secs * 1e6, f"{secs:.3f}s")
+        emit(f"fig2/{name}/e2e", r.e2e * 1e6,
+             f"{r.e2e:.2f}s={r.e2e/0.1:.0f}x_off_10Hz")
+        emit(f"fig2/{name}/generation_fraction",
+             r.generation_fraction * 1e6, f"{r.generation_fraction:.3f}")
+    speed = reports["jetson-orin"].e2e / reports["jetson-thor"].e2e
+    emit("fig2/thor_speedup", speed * 1e6, f"{speed:.2f}x_vs_5x_compute")
+    dec = [p for p in reports["jetson-orin"].phases
+           if p.name == "generation_decode"][0]
+    emit("fig2/decode_memory_fraction", dec.memory_fraction * 1e6,
+         f"{dec.memory_fraction:.3f}_memory_bound")

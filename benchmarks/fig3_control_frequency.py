@@ -1,0 +1,24 @@
+"""Paper Figure 3: control frequency vs model scale (7B..100B) across the
+Table-1 edge systems. Asserts the paper's conclusion: bandwidth (GDDR7/PIM)
+raises frequency but no configuration reaches 10 Hz at 100B."""
+from __future__ import annotations
+
+from repro.core.hardware import TABLE1, get_hardware
+from repro.core.scaling import scaling_sweep
+from repro.core.xpu_sim import simulate_vla
+
+SIZES = (7e9, 14e9, 30e9, 50e9, 70e9, 100e9)
+
+
+def run(emit):
+    cfgs = scaling_sweep(SIZES)
+    best_100b = 0.0
+    for cfg, size in zip(cfgs, SIZES):
+        for hw_name in TABLE1:
+            r = simulate_vla(cfg, get_hardware(hw_name))
+            emit(f"fig3/{hw_name}/{size/1e9:.0f}B", r.control_freq_hz * 1e6,
+                 f"{r.control_freq_hz:.4f}Hz")
+            if size == 100e9:
+                best_100b = max(best_100b, r.control_freq_hz)
+    emit("fig3/best_100b_freq", best_100b * 1e6,
+         f"{best_100b:.3f}Hz_below_10Hz_target={best_100b < 10.0}")

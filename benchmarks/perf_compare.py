@@ -1,0 +1,53 @@
+"""§Perf: baseline-vs-optimized comparison for every tagged hillclimb
+artifact (artifacts/dryrun/*-<tag>.json vs the untagged baseline)."""
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def _key(row):
+    return (row["arch"], row["shape"], row["mesh"])
+
+
+def run(emit):
+    if not os.path.isdir(ART):
+        emit("perf/missing", 0.0, "run repro.launch.sweep first")
+        return
+    base, tagged = {}, []
+    for f in sorted(os.listdir(ART)):
+        if not f.endswith(".json") or f.startswith("_"):
+            continue
+        row = json.load(open(os.path.join(ART, f)))
+        if "skipped" in row:
+            continue
+        if row.get("tag"):
+            tagged.append(row)
+        else:
+            base[_key(row)] = row
+    for row in tagged:
+        b = base.get(_key(row))
+        if b is None:
+            continue
+        a, ab = row.get("analytic", {}), b.get("analytic", {})
+        for metric, cur, ref in [
+            ("bound_s",
+             max(a.get("flops_per_dev", 0) / 197e12,
+                 a.get("hbm_bytes_per_dev", 0) / 819e9,
+                 a.get("coll_bytes_per_dev", 0) / 50e9),
+             max(ab.get("flops_per_dev", 0) / 197e12,
+                 ab.get("hbm_bytes_per_dev", 0) / 819e9,
+                 ab.get("coll_bytes_per_dev", 0) / 50e9)),
+            ("hlo_flops", row["cost"].get("flops", 0),
+             b["cost"].get("flops", 0)),
+            ("hlo_coll", row["collectives"].get("total", 0),
+             b["collectives"].get("total", 0)),
+            ("temp_bytes", row["memory"].get("temp_size_in_bytes", 0),
+             b["memory"].get("temp_size_in_bytes", 0)),
+        ]:
+            gain = ref / cur if cur else 0.0
+            emit(f"perf/{row['arch']}/{row['shape']}/{row['tag']}/{metric}",
+                 cur * 1e6 if metric == "bound_s" else cur,
+                 f"baseline={ref:.3e},gain={gain:.2f}x")

@@ -1,0 +1,28 @@
+"""§Roofline: the three roofline terms per (arch x shape x mesh) from the
+dry-run artifacts (artifacts/dryrun/*.json)."""
+from __future__ import annotations
+
+import os
+
+from repro.roofline import load_artifacts, markdown_table, to_terms
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def run(emit):
+    if not os.path.isdir(ART):
+        emit("roofline/missing", 0.0, "run repro.launch.sweep first")
+        return
+    rows = [r for r in load_artifacts(ART)
+            if "skipped" not in r and not r.get("tag")]
+    terms = [to_terms(r) for r in rows]
+    for t in terms:
+        emit(f"roofline/{t.arch}/{t.shape}/{t.mesh}", t.bound_time * 1e6,
+             f"dom={t.dominant},frac={t.roofline_fraction:.3f},"
+             f"useful={t.useful_flops_ratio:.2f}")
+    if terms:
+        md = markdown_table(terms)
+        out = os.path.join(ART, "..", "roofline_table.md")
+        with open(out, "w") as f:
+            f.write(md + "\n")
+        emit("roofline/table_rows", float(len(terms)), out)

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure plus the roofline
+report and measured microbenchmarks. Prints ``name,us_per_call,derived``.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (claims_check, decode_microbench, fig2_phase_latency,
+                        fig3_control_frequency, perf_compare, roofline_report,
+                        table1_hardware)
+
+MODULES = {
+    "claims": claims_check,
+    "fig2": fig2_phase_latency,
+    "table1": table1_hardware,
+    "fig3": fig3_control_frequency,
+    "roofline": roofline_report,
+    "perf": perf_compare,
+    "micro": decode_microbench,
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="")
+    args = p.parse_args()
+    selected = args.only.split(",") if args.only else list(MODULES)
+
+    rows = []
+
+    def emit(name: str, us_per_call: float, derived: str = ""):
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for key in selected:
+        try:
+            MODULES[key].run(emit)
+        except Exception:
+            failed.append(key)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED modules: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print(f"# {len(rows)} rows from {len(selected)} modules")
+
+
+if __name__ == "__main__":
+    main()

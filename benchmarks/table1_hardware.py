@@ -1,0 +1,21 @@
+"""Paper Table 1: hardware catalog echo + derived ridge points and the
+per-platform single-stream decode bound for MolmoAct-7B."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.hardware import CATALOG, TABLE1, get_hardware
+from repro.core.xpu_sim import simulate_vla
+
+
+def run(emit):
+    cfg = get_config("molmoact-7b")
+    n_bytes = cfg.param_counts()["active"] * 2
+    for name in TABLE1:
+        hw = get_hardware(name)
+        emit(f"table1/{name}/bw_gbs", hw.mem_bw_gbs, f"tflops={hw.total_tflops}")
+        emit(f"table1/{name}/ridge_flops_per_byte",
+             hw.ridge_flops_per_byte, "compute/bw")
+        # analytic per-token decode floor: stream active params once
+        floor = n_bytes / (max(hw.pim_bw_gbs, hw.mem_bw_gbs) * 1e9)
+        emit(f"table1/{name}/decode_floor_ms_per_tok", floor * 1e3,
+             f"{1.0/ (floor * (cfg.n_cot_tokens + 48)):.2f}Hz_ceiling")

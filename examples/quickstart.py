@@ -1,0 +1,51 @@
+"""Quickstart: build a VLA model, run one phase-decomposed control step,
+and price the same workload on the paper's edge platforms.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.hardware import ORIN, THOR
+from repro.core.vla import vla_control_step
+from repro.core.xpu_sim import simulate_vla
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+
+
+def main():
+    # --- 1. a reduced MolmoAct-7B (CPU-friendly), same architecture ------
+    cfg = dataclasses.replace(get_config("molmoact-7b").reduced(),
+                              n_prompt_tokens=8, n_cot_tokens=16)
+    opts = ModelOptions(remat=False)
+    params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    print(f"model: {cfg.name} ({cfg.num_layers}L d={cfg.d_model})")
+
+    # --- 2. one full control step: vision -> CoT -> action ---------------
+    batch = {
+        "tokens": jnp.ones((1, cfg.n_prompt_tokens), jnp.int32),
+        "patches": 0.1 * jnp.ones((1, cfg.vision.num_tokens,
+                                   cfg.vision.embed_dim)),
+    }
+    t0 = time.perf_counter()
+    out = vla_control_step(cfg, opts, params, batch)
+    dt = time.perf_counter() - t0
+    print(f"control step: cot={out.cot_tokens.shape} "
+          f"actions={out.action_tokens.shape} ({dt:.2f}s on CPU)")
+
+    # --- 3. price the FULL 7B workload on the paper's edge platforms -----
+    full = get_config("molmoact-7b")
+    for hw in (ORIN, THOR):
+        r = simulate_vla(full, hw)
+        print(f"{hw.name}: e2e={r.e2e:.2f}s "
+              f"({r.control_freq_hz:.3f} Hz, generation "
+              f"{r.generation_fraction:.0%} of latency)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.checkpoint import store
+from repro.checkpoint.resilience import (ResilientLoop, StepFailure,
+                                         elastic_shrink)
+from repro.checkpoint.store import latest_step, restore, save
+
+__all__ = ["ResilientLoop", "StepFailure", "elastic_shrink", "latest_step",
+           "restore", "save", "store"]

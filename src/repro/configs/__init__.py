@@ -1,0 +1,64 @@
+"""Architecture registry: every assigned arch + the paper's own model.
+
+``get_config(name)`` / ``--arch <id>`` is the single entry point used by the
+launcher, dry-run, benchmarks and tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Iterator, Tuple
+
+from repro.configs.base import (GLOBAL_WINDOW, ActionConfig, ModelConfig,
+                                ShapeConfig, SHAPES, VisionConfig,
+                                shape_supported)
+
+_MODULES = {
+    "whisper-small": "whisper_small",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "smollm-135m": "smollm_135m",
+    "granite-3-2b": "granite_3_2b",
+    "gemma3-27b": "gemma3_27b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "arctic-480b": "arctic_480b",
+    "internvl2-1b": "internvl2_1b",
+    "jamba-1.5-large-398b": "jamba_15_large",
+    "mamba2-780m": "mamba2_780m",
+    "molmoact-7b": "molmoact_7b",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _MODULES if k != "molmoact-7b")
+
+
+def get_config(name: str) -> ModelConfig:
+    if name == "molmoact-7b-dit":
+        return importlib.import_module("repro.configs.molmoact_7b").CONFIG_DIT
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choices: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}").CONFIG
+
+
+def list_archs() -> Tuple[str, ...]:
+    return tuple(_MODULES)
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {name: get_config(name) for name in _MODULES}
+
+
+def cells(include_skipped: bool = False) -> Iterator[Tuple[ModelConfig, ShapeConfig, bool, str]]:
+    """Iterate the 40 assigned (arch x shape) cells.
+
+    Yields (cfg, shape, supported, skip_reason)."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = shape_supported(cfg, shape)
+            if ok or include_skipped:
+                yield cfg, shape, ok, why
+
+
+__all__ = [
+    "ASSIGNED_ARCHS", "ActionConfig", "GLOBAL_WINDOW", "ModelConfig",
+    "SHAPES", "ShapeConfig", "VisionConfig", "all_configs", "cells",
+    "get_config", "list_archs", "shape_supported",
+]

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: phase-decomposed VLA characterization —
+workload IR, analytical XPU roofline simulator (Table-1 hardware catalog +
+PIM), scaling projections, claim validation, and the runnable VLA pipeline.
+"""
+from repro.core import claims, hardware, scaling, workload, xpu_sim
+from repro.core.hardware import CATALOG, TABLE1, get_hardware
+from repro.core.vla import VLAOutput, vla_control_step
+from repro.core.workload import build_vla_step
+from repro.core.xpu_sim import StepReport, simulate_vla
+
+__all__ = ["CATALOG", "TABLE1", "StepReport", "VLAOutput", "build_vla_step",
+           "claims", "get_hardware", "hardware", "scaling", "simulate_vla",
+           "vla_control_step", "workload", "xpu_sim"]

@@ -1,0 +1,92 @@
+"""Executable phase-decomposed VLA pipeline (the runnable counterpart of the
+paper's Figure 1 and of xpu_sim's analytical phases).
+
+``vla_control_step`` runs: vision encode -> generation prefill -> CoT decode
+-> action generation (discrete tokens or DiT), returning the action output
+plus per-phase diagnostics. Each phase is a separately-jittable function so
+the serving layer (and profilers) can time them independently — the same
+decomposition the paper applies with Nsight.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+
+
+@dataclass
+class VLAOutput:
+    cot_tokens: jax.Array           # [B, n_cot] reasoning trace
+    action_tokens: Optional[jax.Array]   # [B, n_action] (discrete mode)
+    trajectory: Optional[jax.Array]      # [B, horizon, action_dim] (dit)
+    phase_tokens: Dict[str, int]
+
+
+def _greedy(logits):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+def decode_tokens(cfg: ModelConfig, opts: ModelOptions, params, first_token,
+                  caches, start_index: int, n_steps: int):
+    """Autoregressive greedy decode of n_steps tokens via lax.scan.
+    Returns (tokens [B, n_steps], last_hidden_logits, caches)."""
+
+    def step(carry, i):
+        tok, caches = carry
+        logits, caches = M.decode_step(cfg, opts, params, tok, caches,
+                                       start_index + i)
+        nxt = _greedy(logits)
+        return (nxt, caches), nxt[:, 0]
+
+    (last, caches), toks = jax.lax.scan(
+        step, (first_token, caches), jnp.arange(n_steps))
+    return jnp.moveaxis(toks, 0, 1), last, caches
+
+
+def vla_control_step(cfg: ModelConfig, opts: ModelOptions, params, batch,
+                     key=None, max_seq: Optional[int] = None) -> VLAOutput:
+    """One full control step for a VLA observation batch.
+
+    batch: {'tokens': [B, n_prompt] instruction, 'patches': [B,T,e] image}.
+    """
+    B = batch["tokens"].shape[0]
+    a = cfg.action
+    n_vis = cfg.vision.num_tokens if cfg.vision else 0
+    n_act = (a.num_action_tokens if a and a.mode == "discrete" else 0)
+    prompt = n_vis + batch["tokens"].shape[1]
+    total = prompt + cfg.n_cot_tokens + n_act + 1
+    max_seq = max_seq or total
+
+    # Phase 1+2: vision encode + generation prefill (joint lowering; the
+    # vision tower is separable for profiling via M.prefill internals)
+    logits, caches = M.prefill(cfg, opts, params, batch, max_seq)
+    tok = _greedy(logits)
+
+    # Phase 3: CoT reasoning decode
+    cot, tok, caches = decode_tokens(cfg, opts, params, tok, caches,
+                                     prompt, cfg.n_cot_tokens)
+
+    # Phase 4: action generation
+    action_tokens = trajectory = None
+    if a is None or a.mode == "discrete":
+        n = n_act or 24
+        action_tokens, _, caches = decode_tokens(
+            cfg, opts, params, tok, caches, prompt + cfg.n_cot_tokens, n)
+    else:
+        # condition the DiT head on the embedding of the last CoT state
+        cond = jnp.take(params["embed"], tok[:, 0], axis=0)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        trajectory = M.generate_actions_dit(cfg, params, cond, key)
+
+    return VLAOutput(
+        cot_tokens=cot, action_tokens=action_tokens, trajectory=trajectory,
+        phase_tokens={"vision": n_vis, "prompt": prompt,
+                      "cot": cfg.n_cot_tokens,
+                      "action": n_act or (a.dit_steps if a else 0)})

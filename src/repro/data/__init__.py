@@ -1,0 +1,3 @@
+from repro.data.pipeline import Prefetcher, lm_batches, vla_batches
+
+__all__ = ["Prefetcher", "lm_batches", "vla_batches"]

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (DEFAULT_RULES, constrain, get_mesh,
+                                        global_mesh, sharding_for, spec_for)
+
+__all__ = ["DEFAULT_RULES", "constrain", "get_mesh", "global_mesh",
+           "sharding_for", "spec_for"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots, each validated in
+interpret mode against a pure-jnp oracle (ref.py):
+
+- flash_attention: prefill/training attention (causal + sliding window, GQA)
+- decode_attention: flash-decode over the KV cache (the paper's bottleneck)
+- ssd: Mamba2 chunked state-space-duality scan
+- moe_gmm: grouped expert MLP (capacity-based MoE hot loop)
+"""
+from repro.kernels import decode_attention, flash_attention, moe_gmm, ssd
+
+__all__ = ["decode_attention", "flash_attention", "moe_gmm", "ssd"]

@@ -1,0 +1,4 @@
+from repro.kernels.decode_attention import ops, ref
+from repro.kernels.decode_attention.ops import decode_attention
+
+__all__ = ["decode_attention", "ops", "ref"]

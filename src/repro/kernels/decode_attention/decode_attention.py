@@ -1,0 +1,112 @@
+"""Flash-decode Pallas TPU kernel — the paper's action-generation bottleneck.
+
+Single-token GQA attention against a long KV cache. This op is memory-bound
+(intensity ~= 1 FLOP/byte « v5e ridge of 240), so the kernel is laid out for
+*bandwidth*: the KV cache streams HBM->VMEM in (bk, h) tiles; all G query
+heads of a KV group ride along each tile (one cache read serves G heads, the
+GQA arithmetic-intensity win). Online softmax state lives in VMEM scratch
+across the sequential KV-block grid dimension.
+
+The valid length (current decode position) arrives as a scalar-prefetch
+operand so fully-invalid KV blocks are skipped before their DMA is issued —
+the same early-exit a paged decode kernel does on GPU, re-expressed for the
+TPU's sequential grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.configs.base import GLOBAL_WINDOW
+
+NEG_INF = -1e30
+
+
+def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bk: int, nk: int, window: int):
+    ik = pl.program_id(2)
+    index = idx_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ik * bk
+    run = k_start <= index
+    if window != GLOBAL_WINDOW:
+        run = jnp.logical_and(run, (index - (k_start + bk - 1)) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # [G, h]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bk, h]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s *= 1.0 / np.sqrt(q.shape[-1])                # [G, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= index
+        if window != GLOBAL_WINDOW:
+            mask &= (index - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None]) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, index, *,
+                            window: int = GLOBAL_WINDOW, bk: int = 512,
+                            interpret: bool = False):
+    """q [B,N,h]; k/v cache [B,S,K,h]; index: int32 scalar (current position).
+    Returns [B,N,h]."""
+    B, N, h = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = N // K
+    bk = min(bk, S)
+    nk = S // bk
+    grid = (B, K, nk)
+    # view q as [B, G, K, h] so one grid cell covers a whole KV group
+    qg = q.reshape(B, K, G, h).swapaxes(1, 2)
+    idx = jnp.asarray(index, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_kernel, bk=bk, nk=nk, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, G, 1, h), lambda b, kh, ik, idx_ref: (b, 0, kh, 0)),
+                pl.BlockSpec((1, bk, 1, h), lambda b, kh, ik, idx_ref: (b, ik, kh, 0)),
+                pl.BlockSpec((1, bk, 1, h), lambda b, kh, ik, idx_ref: (b, ik, kh, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, G, 1, h),
+                                   lambda b, kh, ik, idx_ref: (b, 0, kh, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, h), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, G, K, h), q.dtype),
+        interpret=interpret,
+    )(idx, qg, k_cache, v_cache)
+    # [B,G,K,h] -> head n = k*G + g
+    return out.swapaxes(1, 2).reshape(B, N, h)

@@ -1,0 +1,20 @@
+"""jit'd public wrapper for the decode attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.configs.base import GLOBAL_WINDOW
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q, k_cache, v_cache, index, *,
+                     window: int = GLOBAL_WINDOW, bk: int = 512,
+                     interpret: bool = False):
+    """Single-token flash-decode. q [B,N,h]; caches [B,S,K,h]; index scalar
+    int32 position of the token being decoded. S must divide by bk."""
+    return decode_attention_kernel(q, k_cache, v_cache, index, window=window,
+                                   bk=bk, interpret=interpret)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GLOBAL_WINDOW
+
+
+def decode_attention_ref(q, k_cache, v_cache, index,
+                         window: int = GLOBAL_WINDOW):
+    """q [B,N,h]; caches [B,S,K,h]; index scalar. Returns [B,N,h]."""
+    B, N, h = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = N // K
+    qg = (q * (1.0 / np.sqrt(h))).reshape(B, K, G, h)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache).astype(jnp.float32)
+    kpos = jnp.arange(S)
+    valid = kpos <= index
+    if window != GLOBAL_WINDOW:
+        valid &= (index - kpos) < window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, v_cache)
+    return out.reshape(B, N, h)

@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.configs.base import GLOBAL_WINDOW
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, window: int = GLOBAL_WINDOW,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """Flash attention with GQA + causal/sliding-window masking.
+
+    q [B,S,N,h]; k,v [B,S,K,h] with N % K == 0. S must divide by the block
+    sizes (the model layer guarantees 128-multiples for the assigned shapes).
+    """
+    return flash_attention_kernel(q, k, v, window=window, causal=causal,
+                                  bq=bq, bk=bk, interpret=interpret)

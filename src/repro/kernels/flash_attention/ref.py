@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GLOBAL_WINDOW
+
+
+def attention_ref(q, k, v, window: int = GLOBAL_WINDOW, causal: bool = True):
+    """q [B,S,N,h]; k,v [B,S,K,h] (GQA). fp32 softmax, returns q.dtype."""
+    B, S, N, h = q.shape
+    K = k.shape[2]
+    G = N // K
+    qg = (q * (1.0 / np.sqrt(h))).reshape(B, S, K, G, h)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window != GLOBAL_WINDOW:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, N, h)

@@ -1,0 +1,4 @@
+from repro.kernels.moe_gmm import ops, ref
+from repro.kernels.moe_gmm.ops import grouped_mlp
+
+__all__ = ["grouped_mlp", "ops", "ref"]

@@ -1,0 +1,119 @@
+"""Grouped expert-MLP Pallas TPU kernel (MoE hot loop).
+
+Two kernels:
+  gmm_gated: h = act(x@wi, x@wg)   grid (E, C/bc, F/bf, D/bd), D innermost,
+             two fp32 VMEM accumulators, activation fused on the last D step.
+  gmm_down:  y = h@wo              grid (E, C/bc, D/bd, F/bf), F innermost.
+
+Block shapes are MXU-aligned (128 where the dims allow); the expert (group)
+dimension is the outermost grid axis so expert weights stream HBM->VMEM once
+per (bc x bf) output tile — with expert parallelism over the 'model' mesh
+axis, each core only iterates its local expert shard.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gated_kernel(x_ref, wi_ref, wg_ref, h_ref, acc_h, acc_g, *,
+                  nd: int, act: str):
+    idd = pl.program_id(3)
+
+    @pl.when(idd == 0)
+    def _init():
+        acc_h[...] = jnp.zeros_like(acc_h)
+        acc_g[...] = jnp.zeros_like(acc_g)
+
+    x = x_ref[0].astype(jnp.float32)        # [bc, bd]
+    wi = wi_ref[0].astype(jnp.float32)      # [bd, bf]
+    wg = wg_ref[0].astype(jnp.float32)
+    acc_h[...] += jax.lax.dot_general(x, wi, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    acc_g[...] += jax.lax.dot_general(x, wg, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+
+    @pl.when(idd == nd - 1)
+    def _finalize():
+        h, g = acc_h[...], acc_g[...]
+        if act == "silu":
+            out = jax.nn.silu(g) * h
+        elif act == "gelu":
+            out = jax.nn.gelu(g) * h
+        else:
+            out = jax.nn.gelu(h)
+        h_ref[0] = out.astype(h_ref.dtype)
+
+
+def _down_kernel(h_ref, wo_ref, y_ref, acc, *, nf: int):
+    iff = pl.program_id(3)
+
+    @pl.when(iff == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    h = h_ref[0].astype(jnp.float32)        # [bc, bf]
+    wo = wo_ref[0].astype(jnp.float32)      # [bf, bd]
+    acc[...] += jax.lax.dot_general(h, wo, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(iff == nf - 1)
+    def _finalize():
+        y_ref[0] = acc[...].astype(y_ref.dtype)
+
+
+def _blk(n: int, b: int) -> int:
+    b = min(b, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def gmm_gated(x, wi, wg, *, act: str = "silu", bc: int = 128, bf: int = 128,
+              bd: int = 512, interpret: bool = False):
+    """x [E,C,D]; wi/wg [E,D,F] -> act-fused h [E,C,F]."""
+    E, C, D = x.shape
+    F = wi.shape[-1]
+    bc, bf, bd = _blk(C, bc), _blk(F, bf), _blk(D, bd)
+    grid = (E, C // bc, F // bf, D // bd)
+    kernel = functools.partial(_gated_kernel, nd=grid[3], act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ic, jf, kd: (e, ic, kd)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, jf, kd: (e, kd, jf)),
+            pl.BlockSpec((1, bd, bf), lambda e, ic, jf, kd: (e, kd, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ic, jf, kd: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32),
+                        pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, wi, wg)
+
+
+def gmm_down(h, wo, *, bc: int = 128, bd: int = 128, bf: int = 512,
+             interpret: bool = False):
+    """h [E,C,F]; wo [E,F,D] -> [E,C,D]."""
+    E, C, F = h.shape
+    D = wo.shape[-1]
+    bc, bd, bf = _blk(C, bc), _blk(D, bd), _blk(F, bf)
+    grid = (E, C // bc, D // bd, F // bf)
+    kernel = functools.partial(_down_kernel, nf=grid[3])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bf), lambda e, ic, jd, kf: (e, ic, kf)),
+            pl.BlockSpec((1, bf, bd), lambda e, ic, jd, kf: (e, kf, jd)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bd), lambda e, ic, jd, kf: (e, ic, jd)),
+        out_shape=jax.ShapeDtypeStruct((E, C, D), h.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
+        interpret=interpret,
+    )(h, wo)

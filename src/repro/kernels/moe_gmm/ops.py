@@ -1,0 +1,16 @@
+"""jit'd public wrapper: full grouped expert MLP (up+gate+act then down)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gmm.moe_gmm import gmm_down, gmm_gated
+
+
+@functools.partial(jax.jit, static_argnames=("act", "interpret"))
+def grouped_mlp(xe, wi, wg, wo, act: str = "silu", *,
+                interpret: bool = False):
+    """xe [E,C,D]; wi/wg [E,D,F]; wo [E,F,D] -> [E,C,D]."""
+    h = gmm_gated(xe, wi, wg, act=act, interpret=interpret)
+    return gmm_down(h, wo, interpret=interpret)

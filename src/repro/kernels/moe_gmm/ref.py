@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the grouped expert MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(h, g, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(g) * h
+    if kind == "gelu":
+        return jax.nn.gelu(g) * h
+    return jax.nn.gelu(h)
+
+
+def grouped_mlp_ref(xe, wi, wg, wo, act: str = "silu"):
+    """xe [E,C,D]; wi/wg [E,D,F]; wo [E,F,D] -> [E,C,D]."""
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    g = jnp.einsum("ecd,edf->ecf", xe, wg)
+    return jnp.einsum("ecf,efd->ecd", _act(h, g, act), wo)

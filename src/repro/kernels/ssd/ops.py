@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the SSD kernel (model-facing signature)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("Q", "interpret"))
+def ssd(xs, dt, A_log, B_, C_, *, Q: int = 128, interpret: bool = False):
+    """Model-facing SSD. xs [B,S,H,P]; dt [B,S,H]; B_/C_ [B,S,G,N] (G=1).
+    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    b = B_[:, :, 0]
+    c = C_[:, :, 0]
+    return ssd_kernel(xs, dt.astype(jnp.float32), A_log, b, c, Q=Q,
+                      interpret=interpret)

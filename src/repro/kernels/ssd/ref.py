@@ -1,0 +1,5 @@
+"""Pure-jnp oracles for the SSD kernel: sequential recurrence (ground truth)
+and the chunked formulation (what the kernel implements)."""
+from repro.models.layers import ssd_chunked, ssd_scan_ref  # noqa: F401
+
+__all__ = ["ssd_chunked", "ssd_scan_ref"]

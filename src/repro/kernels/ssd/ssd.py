@@ -1,0 +1,105 @@
+"""Mamba2 SSD (state-space duality) Pallas TPU kernel.
+
+Grid (B, H, S/Q) with the chunk dimension innermost and sequential; the
+[P, N] recurrent state lives in VMEM scratch and is carried across chunks —
+the TPU-idiomatic replacement for the warp-level scan of the CUDA SSD
+kernel. Per chunk it computes the quadratic intra-chunk term on the MXU
+(two [Q,*] matmuls), plus the rank-1 inter-chunk correction, then updates
+the state. Q=128 keeps every matmul MXU-aligned.
+
+Inputs are per-head slices: x [B,S,H,P], dt [B,S,H] (post-softplus, fp32),
+A_log [H], B_/C_ [B,S,N] (G=1). Outputs y [B,S,H,P] and final state
+[B,H,P,N].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, state_ref,
+            h_scr, *, Q: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0, :, 0]                               # [Q] fp32
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))      # scalar
+    b = b_ref[0].astype(jnp.float32)                   # [Q, N]
+    c = c_ref[0].astype(jnp.float32)                   # [Q, N]
+
+    dA = dt * a                                        # [Q]
+    cum = jnp.cumsum(dA)                               # [Q]
+    seg_end = cum[-1]
+
+    # intra-chunk: scores[s,t] = (c_s . b_t) * exp(cum_s - cum_t) for s>=t
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,Q]
+    Lexp = cum[:, None] - cum[None, :]
+    sl = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    tl = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(sl >= tl, jnp.exp(Lexp), 0.0)
+    w = cb * L                                         # [Q,Q]
+    xdt = x * dt[:, None]                              # [Q,P]
+    y = jax.lax.dot_general(w, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += (c * exp(cum)) @ h^T
+    h = h_scr[...]                                     # [P,N]
+    c_scaled = c * jnp.exp(cum)[:, None]
+    y += jax.lax.dot_general(c_scaled, h, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: h = exp(seg)*h + (x*dt*decay_to_end)^T @ b
+    decay_to_end = jnp.exp(seg_end - cum)              # [Q]
+    xw = x * (dt * decay_to_end)[:, None]              # [Q,P]
+    h_new = h * jnp.exp(seg_end) + jax.lax.dot_general(
+        xw, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h_scr[...] = h_new
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        state_ref[0, 0] = h_new
+
+
+def ssd_kernel(x, dt, A_log, B_, C_, *, Q: int = 128,
+               interpret: bool = False):
+    """x [B,S,H,P]; dt [B,S,H] fp32; A_log [H]; B_/C_ [B,S,N].
+    Returns (y [B,S,H,P], state [B,H,P,N])."""
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(Q, S)
+    nc = S // Q
+    grid = (Bsz, H, nc)
+
+    kernel = functools.partial(_kernel, Q=Q, nc=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, hh, ic: (b, ic, hh, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, hh, ic: (b, ic, hh)),
+            pl.BlockSpec((1,), lambda b, hh, ic: (hh,)),
+            pl.BlockSpec((1, Q, N), lambda b, hh, ic: (b, ic, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, hh, ic: (b, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, hh, ic: (b, ic, hh, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, hh, ic: (b, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A_log, B_, C_)
+    return y, state

@@ -1,0 +1,20 @@
+"""Production meshes. A function (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_elastic_mesh(data: int, model: int = 16):
+    """Reduced-data-axis mesh for elastic shrink after node loss."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape)
+cell — the AOT surface the dry-run lowers against (no device allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import spec_for
+from repro.models import model as M
+from repro.models import stacks
+from repro.models.layers import ModelOptions
+from repro.models.params import PSpec, param_shapes, param_shardings
+
+CACHE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.bfloat16
+
+
+def text_len(cfg: ModelConfig, total_seq: int) -> int:
+    """Text-token count once the vision prefix is folded into the sequence."""
+    if cfg.vision is not None:
+        return total_seq - cfg.vision.num_tokens
+    return total_seq
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = shape.global_batch
+    S = text_len(cfg, shape.seq_len)
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.vision is not None:
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision.num_tokens, cfg.vision.embed_dim), PARAM_DTYPE)
+    if cfg.encoder is not None:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.num_tokens, cfg.encoder.embed_dim), PARAM_DTYPE)
+    return out
+
+
+def batch_axes(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    out = {"tokens": ("batch", "act_seq")}
+    if cfg.vision is not None:
+        out["patches"] = ("batch", None, None)
+    if cfg.encoder is not None:
+        out["frames"] = ("batch", None, None)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                opts: Optional[ModelOptions] = None) -> Dict:
+    """All inputs for the cell's step function, as ShapeDtypeStructs.
+
+    train/prefill: {'batch': ...}
+    decode:        {'token', 'caches', 'index'} with a seq_len-deep cache.
+    """
+    opts = opts or ModelOptions()
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, shape)}
+    B = shape.global_batch
+    t = stacks.cache_template(cfg, B, shape.seq_len, CACHE_DTYPE, opts)
+    caches = jax.tree_util.tree_map_with_path(
+        lambda path, s: jax.ShapeDtypeStruct(
+            s.shape, stacks.cache_dtype(path[-1].key, CACHE_DTYPE)),
+        t, is_leaf=lambda x: isinstance(x, PSpec))
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "caches": caches,
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    opts: Optional[ModelOptions] = None):
+    """NamedShardings matching input_specs."""
+    from jax.sharding import NamedSharding
+
+    opts = opts or ModelOptions()
+    if shape.kind in ("train", "prefill"):
+        specs = batch_specs(cfg, shape)
+        axes = batch_axes(cfg)
+        return {"batch": {
+            k: NamedSharding(mesh, spec_for(specs[k].shape, axes[k], mesh))
+            for k in specs}}
+    t = stacks.cache_template(cfg, shape.global_batch, shape.seq_len,
+                              CACHE_DTYPE, opts)
+    caches = jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(s.shape, s.axes, mesh)),
+        t, is_leaf=lambda x: isinstance(x, PSpec))
+    return {
+        "token": NamedSharding(
+            mesh, spec_for((shape.global_batch, 1), ("batch", None), mesh)),
+        "caches": caches,
+        "index": NamedSharding(mesh, spec_for((), (), mesh)),
+    }
+
+
+def model_specs_and_shardings(cfg: ModelConfig, mesh,
+                              dtype=PARAM_DTYPE):
+    template = M.model_template(cfg)
+    return param_shapes(template, dtype), param_shardings(template, mesh)

@@ -1,0 +1,9 @@
+from repro.models.layers import ModelOptions
+from repro.models.model import (decode_step, forward, init_caches,
+                                init_params, model_template, prefill)
+from repro.models.params import (init_params as init_from_template,
+                                 param_count, param_shapes, param_shardings)
+
+__all__ = ["ModelOptions", "decode_step", "forward", "init_caches",
+           "init_params", "model_template", "param_count", "param_shapes",
+           "param_shardings", "prefill"]

@@ -1,0 +1,106 @@
+"""Action heads (the paper's third subsystem, §2 'Action Transformer').
+
+- discrete: action tokens live in the LM vocabulary; action generation is
+  continued autoregressive decode (MolmoAct-style). No extra params.
+- dit: a small Diffusion Transformer decodes a continuous [horizon, action_dim]
+  trajectory conditioned (AdaLN) on the LM's final hidden state, iterating
+  ``dit_steps`` denoising steps.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ActionConfig
+from repro.models.params import PSpec, stack
+
+
+def dit_template(a: ActionConfig, d_lm: int) -> Dict:
+    d, n = a.dit_d_model, a.dit_heads
+    h = d // n
+    layer = {
+        "ada": PSpec((d, 6 * d), (None, None), "zeros"),      # AdaLN-zero
+        "wq": PSpec((d, n, h), (None, "heads", "head_dim"), fan_in=d),
+        "wk": PSpec((d, n, h), (None, "heads", "head_dim"), fan_in=d),
+        "wv": PSpec((d, n, h), (None, "heads", "head_dim"), fan_in=d),
+        "wo": PSpec((n, h, d), ("heads", "head_dim", None), fan_in=d),
+        "wi": PSpec((d, 4 * d), (None, "mlp"), fan_in=d),
+        "wo_mlp": PSpec((4 * d, d), ("mlp", None), fan_in=4 * d),
+    }
+    return {
+        "in_proj": PSpec((a.action_dim, d), (None, None), fan_in=a.action_dim),
+        "cond_proj": PSpec((d_lm, d), (None, None), fan_in=d_lm),
+        "t_proj": PSpec((256, d), (None, None), fan_in=256),
+        "pos": PSpec((a.horizon, d), (None, None), "pos"),
+        "stack": stack(layer, a.dit_layers, "layers"),
+        "final_ada": PSpec((d, 2 * d), (None, None), "zeros"),
+        "out_proj": PSpec((d, a.action_dim), (None, None), "zeros"),
+    }
+
+
+def _timestep_embed(t, dim=256):
+    half = dim // 2
+    freqs = jnp.exp(-np.log(10_000.0) * jnp.arange(half) / half)
+    ang = t.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], -1)
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None]) + shift[:, None]
+
+
+def dit_denoise(p, noisy, t, cond, a: ActionConfig):
+    """One denoiser evaluation. noisy [B,horizon,action_dim], t [B],
+    cond [B,d_lm] (LM final hidden). Returns predicted noise."""
+    x = jnp.einsum("bha,ad->bhd", noisy, p["in_proj"]) + p["pos"][None]
+    c = jnp.einsum("bd,de->be", cond, p["cond_proj"]) \
+        + jnp.einsum("bt,td->bd", _timestep_embed(t), p["t_proj"])
+    c = jax.nn.silu(c)
+    n, h = a.dit_heads, a.dit_d_model // a.dit_heads
+
+    def body(x, pl):
+        mods = jnp.einsum("bd,de->be", c, pl["ada"]).reshape(
+            x.shape[0], 6, a.dit_d_model)
+        s1, g1, b1, s2, g2, b2 = [mods[:, i] for i in range(6)]
+        y = _rms(x)
+        y = _modulate(y, b1, s1)
+        q = jnp.einsum("bhd,dne->bhne", y, pl["wq"])
+        k = jnp.einsum("bhd,dne->bhne", y, pl["wk"])
+        v = jnp.einsum("bhd,dne->bhne", y, pl["wv"])
+        logits = jnp.einsum("bsne,btne->bnst", q, k) * float(1.0 / np.sqrt(h))
+        w = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+        o = jnp.einsum("bnst,btne->bsne", w, v)
+        x = x + g1[:, None] * jnp.einsum("bsne,ned->bsd", o, pl["wo"])
+        y = _modulate(_rms(x), b2, s2)
+        y = jax.nn.gelu(jnp.einsum("bhd,df->bhf", y, pl["wi"]))
+        x = x + g2[:, None] * jnp.einsum("bhf,fd->bhd", y, pl["wo_mlp"])
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, p["stack"])
+    mods = jnp.einsum("bd,de->be", c, p["final_ada"]).reshape(
+        x.shape[0], 2, a.dit_d_model)
+    x = _modulate(_rms(x), mods[:, 1], mods[:, 0])
+    return jnp.einsum("bhd,da->bha", x, p["out_proj"])
+
+
+def _rms(x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def dit_generate(p, cond, a: ActionConfig, key):
+    """DDIM-style deterministic sampling loop (dit_steps iterations)."""
+    B = cond.shape[0]
+    x = jax.random.normal(key, (B, a.horizon, a.action_dim), cond.dtype)
+    ts = jnp.linspace(1.0, 1.0 / a.dit_steps, a.dit_steps)
+
+    def step(x, t):
+        eps = dit_denoise(p, x, jnp.full((B,), t * 1000.0), cond, a)
+        x = x - eps * (1.0 / a.dit_steps)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, ts)
+    return x

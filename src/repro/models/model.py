@@ -1,0 +1,143 @@
+"""Top-level model API, driven entirely by ModelConfig.
+
+    template = model_template(cfg)            # PSpec tree (shapes+axes+init)
+    params   = init_params(template, key)     # concrete weights
+    logits   = forward(cfg, opts, params, batch)            # train / scoring
+    logits, caches = prefill(cfg, opts, params, batch, max_seq)
+    logits, caches = decode_step(cfg, opts, params, tok, caches, index)
+
+``batch`` is a dict: tokens [B,S] (+ 'frames' [B,T,e] for audio enc-dec,
+'patches' [B,T,e] for VLMs — the stubbed modality frontends).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import action as action_lib
+from repro.models import stacks
+from repro.models.layers import ModelOptions, apply_norm
+from repro.models.params import PSpec, init_params, param_shapes  # re-export
+from repro.models.stacks import init_caches  # re-export
+
+__all__ = ["model_template", "forward", "prefill", "decode_step",
+           "init_params", "init_caches", "ModelOptions"]
+
+
+def model_template(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    t: Dict = {
+        "embed": PSpec((cfg.vocab_size, d), ("vocab", "embed"), fan_in=d),
+        "decoder": stacks.decoder_template(cfg),
+    }
+    t.update(stacks._norm_template(cfg, "final_norm", d))
+    if not cfg.tie_embeddings:
+        # stored [V, D] like the embedding so the logits einsum contracts on
+        # D and GSPMD keeps the vocab dim model-sharded (see §Perf iter 1:
+        # a [D, V] layout + transpose made XLA compute full-vocab logits
+        # per device)
+        t["lm_head"] = PSpec((cfg.vocab_size, d), ("vocab", "embed"), fan_in=d)
+    if cfg.pos == "absolute":
+        # sized for the largest assigned decode shape (decode_32k)
+        t["pos"] = PSpec((32_768, d), (None, None), "pos")
+    if cfg.encoder is not None:
+        t["encoder"] = stacks.tower_template(cfg.encoder, d)
+    if cfg.vision is not None:
+        t["vision"] = stacks.tower_template(cfg.vision, d)
+    if cfg.action is not None and cfg.action.mode == "dit":
+        t["action_dit"] = action_lib.dit_template(cfg.action, d)
+    return t
+
+
+def _embed_tokens(params, tokens, cfg: ModelConfig, positions=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos == "absolute":
+        pos = positions if positions is not None else jnp.arange(tokens.shape[-1])
+        x = x + jnp.take(params["pos"], pos, axis=0).astype(x.dtype)
+    return x
+
+
+def _encode_context(params, batch, cfg: ModelConfig, opts: ModelOptions):
+    """Run the stubbed-frontend towers. Returns (cross_ctx, prefix_embeds)."""
+    ctx = prefix = None
+    if cfg.encoder is not None:  # whisper: cross-attention context
+        ctx = stacks.apply_tower(params["encoder"], batch["frames"],
+                                 cfg.encoder, opts)
+    if cfg.vision is not None:   # VLM: prefix tokens in the LM sequence
+        prefix = stacks.apply_tower(params["vision"], batch["patches"],
+                                    cfg.vision, opts)
+    return ctx, prefix
+
+
+def _logits(params, x, cfg: ModelConfig):
+    x = apply_norm(params, x, cfg, "final_norm")
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)   # head [V, D]
+    return constrain(logits, "batch", "act_seq", "act_vocab")
+
+
+def _sequence(params, batch, cfg, opts):
+    """Token embeddings for full-sequence passes (vision prefix folded in)."""
+    tokens = batch["tokens"]
+    ctx, prefix = _encode_context(params, batch, cfg, opts)
+    if prefix is not None:
+        n_vis = prefix.shape[1]
+        text = _embed_tokens(params, tokens, cfg)
+        x = jnp.concatenate([prefix.astype(text.dtype), text], axis=1)
+        S = x.shape[1]
+    else:
+        x = _embed_tokens(params, tokens, cfg)
+        S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (x.shape[0], S))
+    return x, positions, ctx
+
+
+def forward(cfg: ModelConfig, opts: ModelOptions, params, batch,
+            train: bool = False):
+    """Full-sequence forward -> logits [B, S_total, V]."""
+    x, positions, ctx = _sequence(params, batch, cfg, opts)
+    x = constrain(x, "batch", "act_seq", "act_embed")
+    x, _ = stacks.apply_decoder(params["decoder"], x, cfg, opts, positions,
+                                ctx=ctx, train=train)
+    return _logits(params, x, cfg)
+
+
+def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
+            max_seq: int, cache_dtype=jnp.bfloat16):
+    """Process the prompt, filling a decode cache sized ``max_seq``.
+    Returns (last-position logits [B,1,V], caches)."""
+    x, positions, ctx = _sequence(params, batch, cfg, opts)
+    B = x.shape[0]
+    caches = init_caches(cfg, B, max_seq, cache_dtype, opts)
+    x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
+                                     positions, caches=caches, cache_index=0,
+                                     ctx=ctx)
+    return _logits(params, x[:, -1:], cfg), caches
+
+
+def decode_step(cfg: ModelConfig, opts: ModelOptions, params, token,
+                caches, index):
+    """One autoregressive step. token [B,1] int32; index: scalar position or
+    per-slot [B] vector (continuous batching).
+    Returns (logits [B,1,V], new caches)."""
+    B = token.shape[0]
+    idx = jnp.asarray(index, jnp.int32)
+    positions = (jnp.full((B, 1), idx, jnp.int32) if idx.ndim == 0
+                 else idx[:, None])
+    x = _embed_tokens(params, token, cfg, positions=positions)
+    x = constrain(x, "batch", "act_seq", "act_embed")
+    x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
+                                     positions, caches=caches,
+                                     cache_index=index)
+    return _logits(params, x, cfg), caches
+
+
+def generate_actions_dit(cfg: ModelConfig, params, cond_hidden, key):
+    """Continuous trajectory via the DiT head (cfg.action.mode == 'dit')."""
+    assert cfg.action is not None and cfg.action.mode == "dit"
+    return action_lib.dit_generate(params["action_dit"], cond_hidden,
+                                   cfg.action, key)

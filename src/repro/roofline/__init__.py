@@ -1,0 +1,6 @@
+from repro.roofline.hlo import collective_bytes, count_ops
+from repro.roofline.report import (RooflineTerms, load_artifacts,
+                                   markdown_table, model_flops_for, to_terms)
+
+__all__ = ["RooflineTerms", "collective_bytes", "count_ops",
+           "load_artifacts", "markdown_table", "model_flops_for", "to_terms"]

@@ -1,0 +1,104 @@
+"""Collective-traffic extraction from compiled HLO text.
+
+cost_analysis() has no collective-bytes entry, so we parse the optimized
+HLO: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction contributes its *result* byte size (the
+per-device wire traffic of a ring implementation is (n-1)/n of that —
+close enough at n=16..512, and consistent across cells).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %all-reduce.7 = f32[2048,128]{1,0} all-reduce(...)
+_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+# tuple-result collectives:  = (f32[..], f32[..]) all-reduce(
+_RE_TUPLE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_RE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes by collective kind + 'total'."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _RE.search(line)
+        if m and not line.lstrip().startswith("ROOT (") :
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            continue
+        m = _RE_TUPLE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for dt, dd in _RE_SHAPE.findall(shapes):
+                out[kind] += _shape_bytes(dt, dd)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+# --- per-dot FLOP attribution (hillclimb evidence) -------------------------
+
+_RE_DEF = re.compile(r"%([\w.\-]+)\s*=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\]")
+_RE_DOT = re.compile(r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\bdot\(%([\w.\-]+)")
+_RE_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def dot_flops(hlo_text: str, top: int = 0):
+    """Sum 2*prod(out)*contract_size over every dot in the HLO. Operand
+    shapes are resolved through a name->shape map built from instruction
+    definitions (optimized HLO references operands by name). Exact for
+    unrolled programs; per-trip-count for scanned ones.
+    Returns (total, top-N [(flops, line)])."""
+    shapes = {}
+    for line in hlo_text.splitlines():
+        md = _RE_DEF.search(line)
+        if md:
+            shapes[md.group(1)] = [int(d) for d in md.group(3).split(",") if d]
+    total = 0.0
+    items = []
+    for line in hlo_text.splitlines():
+        m = _RE_DOT.search(line)
+        if not m:
+            continue
+        out_dims = [int(d) for d in m.group(2).split(",") if d]
+        lhs_dims = shapes.get(m.group(3), [])
+        mc = _RE_CONTRACT.search(line)
+        cdims = [int(d) for d in mc.group(1).split(",")] if mc and mc.group(1) else []
+        csize = 1
+        for c in cdims:
+            if c < len(lhs_dims):
+                csize *= lhs_dims[c]
+        f = 2.0 * csize
+        for d in out_dims:
+            f *= d
+        total += f
+        items.append((f, line.strip()[:160]))
+    items.sort(key=lambda t: -t[0])
+    return total, items[:top] if top else items

@@ -1,0 +1,131 @@
+"""Roofline terms from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis() on the CPU backend reports *per-device* numbers, so the
+per-chip formulation is used directly — equivalent to the global/chips one.)
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional
+
+from repro.core.hardware import TPU_V5E
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops: float           # 6*N*D (dense) / 6*N_active*D (MoE)
+    temp_bytes_per_dev: float = 0.0
+    arg_bytes_per_dev: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / (TPU_V5E.bf16_tflops * 1e12)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / (TPU_V5E.mem_bw_gbs * 1e9)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / (TPU_V5E.ici_gbs * 1e9)
+
+    @property
+    def dominant(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (global) — remat/redundancy waste."""
+        chips = 512 if self.mesh == "multi_pod" else 256
+        hlo_global = self.flops_per_dev * chips
+        return self.model_flops / max(hlo_global, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the roofline-bound step time."""
+        chips = 512 if self.mesh == "multi_pod" else 256
+        t_useful = self.model_flops / chips / (TPU_V5E.bf16_tflops * 1e12)
+        return t_useful / max(self.bound_time, 1e-30)
+
+    def row(self) -> Dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N_active*D for training; 2*N_active*D for single forward/decode."""
+    n = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load_artifacts(art_dir: str) -> List[Dict]:
+    rows = []
+    for f in sorted(os.listdir(art_dir)):
+        if f.endswith(".json"):
+            with open(os.path.join(art_dir, f)) as fh:
+                rows.append(json.load(fh))
+    return rows
+
+
+def to_terms(row: Dict, use_analytic: bool = True) -> RooflineTerms:
+    """Build roofline terms from a dry-run artifact.
+
+    use_analytic=True (default) prices with the operator-IR model (see
+    roofline/analytic.py) because XLA cost_analysis counts scan bodies once;
+    False gives the HLO-raw numbers (cross-check / unrolled cells)."""
+    an = row.get("analytic") if use_analytic else None
+    if an:
+        flops, bts, coll = (an["flops_per_dev"], an["hbm_bytes_per_dev"],
+                            an["coll_bytes_per_dev"])
+    else:
+        flops = row["cost"].get("flops", 0.0)
+        bts = row["cost"].get("bytes accessed", 0.0)
+        coll = row["collectives"].get("total", 0.0)
+    return RooflineTerms(
+        arch=row["arch"], shape=row["shape"], mesh=row["mesh"],
+        flops_per_dev=flops, bytes_per_dev=bts, coll_bytes_per_dev=coll,
+        model_flops=row["model_flops"],
+        temp_bytes_per_dev=row["memory"].get("temp_size_in_bytes", 0.0),
+        arg_bytes_per_dev=row["memory"].get("argument_size_in_bytes", 0.0))
+
+
+def markdown_table(rows: List[RooflineTerms]) -> str:
+    hdr = ("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "dominant | useful/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.t_compute:.3e}s "
+            f"| {r.t_memory:.3e}s | {r.t_collective:.3e}s | {r.dominant} "
+            f"| {r.useful_flops_ratio:.2f} | {r.roofline_fraction:.3f} |")
+    return "\n".join(lines)

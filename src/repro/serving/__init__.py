@@ -1,0 +1,4 @@
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampler import greedy, sample
+
+__all__ = ["Request", "ServingEngine", "greedy", "sample"]

@@ -1,0 +1,21 @@
+"""Token samplers for the serving path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits, key=None):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+def sample(logits, key, temperature: float = 1.0, top_k: int = 0):
+    """Temperature + optional top-k sampling. logits [B,1,V] -> [B]."""
+    l = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0:
+        return greedy(logits)
+    l = l / temperature
+    if top_k:
+        kth = jnp.sort(l, axis=-1)[:, -top_k][:, None]
+        l = jnp.where(l < kth, -1e30, l)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)

@@ -1,0 +1,6 @@
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_at
+from repro.training.train_step import (TrainConfig, init_train_state, lm_loss,
+                                       make_train_step)
+
+__all__ = ["AdamWConfig", "TrainConfig", "adamw_update", "init_opt_state",
+           "init_train_state", "lm_loss", "lr_at", "make_train_step"]

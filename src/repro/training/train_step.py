@@ -1,0 +1,95 @@
+"""Training step: causal-LM cross entropy, microbatched gradient
+accumulation (lets XLA overlap the DP all-reduce of microbatch i's grads
+with microbatch i+1's backward), remat via the stacks' scanned bodies.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+from repro.training import compress as C
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    compress_grads: bool = False
+    z_loss: float = 1e-4          # logit regularizer (PaLM-style)
+
+
+def lm_loss(cfg: ModelConfig, opts: ModelOptions, params, batch,
+            z_loss: float = 0.0):
+    """Next-token CE over batch['tokens']; vision/audio prefix positions and
+    padding (token == -1) are masked out of the loss."""
+    tokens = batch["tokens"]
+    logits = M.forward(cfg, opts, params, batch, train=True)
+    n_prefix = logits.shape[1] - tokens.shape[1]
+    logits = logits[:, n_prefix:]
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1].astype(jnp.float32)
+    mask = (targets >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(targets, 0)[..., None], -1)[..., 0]
+    nll = (lse - picked) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    if z_loss:
+        loss = loss + z_loss * (jnp.square(lse) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, opts: ModelOptions, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). batch tokens [B_global, S] (+ modality stubs)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm_loss(cfg, opts, p, batch, tcfg.z_loss))(params)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                loss, g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), None
+            mbs = jax.tree.map(
+                lambda x: x.reshape((tcfg.microbatches,
+                                     x.shape[0] // tcfg.microbatches)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (grads, loss), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            loss = loss / tcfg.microbatches
+        else:
+            loss, grads = grads_of(params, batch)
+
+        if tcfg.compress_grads:
+            grads, err = C.compress_grads(grads, opt_state["error"])
+        new_params, new_inner, metrics = adamw_update(
+            tcfg.opt, grads, opt_state["inner"], params)
+        new_state = {"inner": new_inner}
+        if tcfg.compress_grads:
+            new_state["error"] = err
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, params):
+    state = {"inner": init_opt_state(tcfg.opt, params)}
+    if tcfg.compress_grads:
+        state["error"] = C.init_error_state(params)
+    return state

@@ -1,0 +1,30 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def opts():
+    return ModelOptions(remat=False)
+
+
+_PARAM_CACHE = {}
+
+
+def reduced_params(name: str, dtype=jnp.float32):
+    """Session-cached reduced config + params for an arch."""
+    if name not in _PARAM_CACHE:
+        cfg = get_config(name).reduced()
+        params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
+                               dtype)
+        _PARAM_CACHE[name] = (cfg, params)
+    return _PARAM_CACHE[name]

@@ -1,0 +1,87 @@
+"""The analytic cell-pricing model that backs §Roofline."""
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.sharding import DEFAULT_RULES, INFERENCE_RULES
+from repro.roofline.analytic import (analytic_cell, kv_cache_bytes,
+                                     params_bytes_per_dev)
+
+MESH = {"pod": 1, "data": 16, "model": 16}
+
+
+def test_params_bytes_sharding_sanity():
+    # gemma: fully shardable -> close to total/256; smollm: heads/kv
+    # replicate but big tensors (vocab, mlp) shard
+    g = get_config("gemma3-27b")
+    pb = params_bytes_per_dev(g, MESH)
+    total = g.param_counts()["total"] * 2
+    assert total / 256 * 0.8 < pb < total / 256 * 3
+    s = get_config("smollm-135m")
+    pbs = params_bytes_per_dev(s, MESH)
+    assert pbs < s.param_counts()["total"] * 2 / 16  # at least data-sharded
+
+
+def test_inference_rules_store_more_but_fit():
+    g = get_config("gemma3-27b")
+    fsdp = params_bytes_per_dev(g, MESH)
+    infer = params_bytes_per_dev(g, MESH, rules=INFERENCE_RULES)
+    assert infer > fsdp                  # replication costs storage...
+    assert infer < 16e9                  # ...but still fits v5e HBM
+    # arctic 480B: expert width picks up the freed data axis
+    a = get_config("arctic-480b")
+    assert params_bytes_per_dev(a, MESH, rules=INFERENCE_RULES) < 16e9
+
+
+def test_window_cache_shrinks_kv_bytes():
+    g = get_config("gemma3-27b")
+    full = kv_cache_bytes(g, SHAPES["decode_32k"], MESH, window_cache=False)
+    ring = kv_cache_bytes(g, SHAPES["decode_32k"], MESH, window_cache=True)
+    assert ring < 0.4 * full             # 50/62 layers cache 1024 vs 32768
+
+
+def test_decode_is_memory_or_collective_bound():
+    """The paper's claim, as priced on the TPU target."""
+    for arch in ("gemma3-27b", "granite-3-2b", "whisper-small"):
+        c = analytic_cell(get_config(arch), SHAPES["decode_32k"])
+        t_c = c.flops_per_dev / 197e12
+        t_m = c.hbm_bytes_per_dev / 819e9
+        assert t_m > 10 * t_c, arch      # intensity « ridge
+
+
+def test_causal_pairs_reduces_flops():
+    a = get_config("arctic-480b")
+    base = analytic_cell(a, SHAPES["prefill_32k"])
+    opt = analytic_cell(a, SHAPES["prefill_32k"], causal_pairs=True)
+    assert opt.flops_per_dev < 0.75 * base.flops_per_dev
+
+
+def test_seq_parallel_reduces_collectives():
+    j = get_config("jamba-1.5-large-398b")
+    base = analytic_cell(j, SHAPES["train_4k"])
+    opt = analytic_cell(j, SHAPES["train_4k"], seq_parallel=True)
+    assert opt.coll_bytes_per_dev < 0.8 * base.coll_bytes_per_dev
+    assert opt.flops_per_dev == base.flops_per_dev
+
+
+def test_expert_padding_shards_moe_compute():
+    import dataclasses
+    g = get_config("granite-moe-3b-a800m")
+    gp = dataclasses.replace(g, num_experts_padded=48)
+    base = analytic_cell(g, SHAPES["train_4k"])
+    opt = analytic_cell(gp, SHAPES["train_4k"])
+    assert opt.flops_per_dev < 0.7 * base.flops_per_dev
+
+
+def test_remat_flops_multiplier():
+    g = get_config("granite-3-2b")
+    with_r = analytic_cell(g, SHAPES["train_4k"], remat=True)
+    without = analytic_cell(g, SHAPES["train_4k"], remat=False)
+    assert with_r.flops_per_dev / without.flops_per_dev == pytest.approx(
+        4.0 / 3.0, rel=1e-6)
+
+
+def test_multi_pod_shards_batch_further():
+    g = get_config("gemma3-27b")
+    sp = analytic_cell(g, SHAPES["train_4k"])
+    mp = analytic_cell(g, SHAPES["train_4k"], multi_pod=True)
+    assert mp.flops_per_dev == pytest.approx(sp.flops_per_dev / 2, rel=1e-3)

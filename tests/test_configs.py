@@ -1,0 +1,86 @@
+"""Config registry: exact assigned specs, param counts, cell enumeration."""
+import numpy as np
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, all_configs, cells,
+                           get_config, shape_supported)
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+    "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+    "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 0, 49155),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+}
+
+# total-params sanity bands (billions)
+PARAM_BANDS = {
+    "whisper-small": (0.15, 0.30), "qwen1.5-0.5b": (0.35, 0.60),
+    "smollm-135m": (0.10, 0.17), "granite-3-2b": (2.0, 3.0),
+    "gemma3-27b": (24, 30), "granite-moe-3b-a800m": (2.7, 3.9),
+    "arctic-480b": (430, 530), "internvl2-1b": (0.7, 1.1),
+    "jamba-1.5-large-398b": (350, 440), "mamba2-780m": (0.65, 0.95),
+    "molmoact-7b": (7.0, 8.5),
+}
+
+
+@pytest.mark.parametrize("name", list(EXPECTED))
+def test_exact_config(name):
+    c = get_config(name)
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == EXPECTED[name]
+
+
+@pytest.mark.parametrize("name", list(PARAM_BANDS))
+def test_param_counts(name):
+    n = get_config(name).param_counts()["total"] / 1e9
+    lo, hi = PARAM_BANDS[name]
+    assert lo <= n <= hi, f"{name}: {n:.2f}B not in [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    c = get_config("granite-moe-3b-a800m")
+    p = c.param_counts()
+    assert 0.6e9 <= p["active"] <= 1.1e9          # ~800M active
+    assert p["active"] < p["total"]
+    arctic = get_config("arctic-480b").param_counts()
+    assert 10e9 <= arctic["active"] <= 20e9       # ~17B active
+
+
+def test_cell_enumeration():
+    all_cells = list(cells(include_skipped=True))
+    assert len(all_cells) == 40
+    supported = [c for c in all_cells if c[2]]
+    assert len(supported) == 33
+    # long_500k runs only for sub-quadratic archs
+    long_ok = {c[0].name for c in supported if c[1].name == "long_500k"}
+    assert long_ok == {"gemma3-27b", "jamba-1.5-large-398b", "mamba2-780m"}
+
+
+def test_pattern_consistency():
+    g = get_config("gemma3-27b")
+    ws = g.windows()
+    assert ws[5] == 0 and ws[0] == 1024 and len(ws) == 62
+    assert sum(1 for w in ws if w == 0) == 10      # global layers
+    j = get_config("jamba-1.5-large-398b")
+    attn = [i for i in range(j.num_layers) if j.is_attn_layer(i)]
+    assert len(attn) == 9                          # 1:7 interleave over 72
+    moe = [i for i in range(j.num_layers) if j.is_moe_layer(i)]
+    assert len(moe) == 36
+
+
+def test_reduced_configs_preserve_structure():
+    for name, cfg in all_configs().items():
+        r = cfg.reduced()
+        assert r.family == cfg.family
+        assert (r.num_experts > 0) == (cfg.num_experts > 0)
+        assert (r.encoder is None) == (cfg.encoder is None)
+        assert (r.vision is None) == (cfg.vision is None)
+        if cfg.num_heads:
+            assert r.num_heads % r.num_kv_heads == 0

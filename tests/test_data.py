@@ -1,0 +1,46 @@
+"""Data pipeline: shapes, shard disjointness, prefetcher."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import Prefetcher, lm_batches, vla_batches
+
+
+def test_lm_batch_shapes():
+    cfg = get_config("internvl2-1b").reduced()
+    b = next(lm_batches(cfg, 4, 16, steps=1))
+    assert b["tokens"].shape == (4, 16)
+    assert b["tokens"].dtype == np.int32
+    assert b["patches"].shape == (4, cfg.vision.num_tokens,
+                                  cfg.vision.embed_dim)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < cfg.vocab_size
+
+
+def test_shards_are_disjoint():
+    cfg = get_config("smollm-135m").reduced()
+    a = next(lm_batches(cfg, 8, 16, shard=0, num_shards=2, steps=1))
+    b = next(lm_batches(cfg, 8, 16, shard=1, num_shards=2, steps=1))
+    assert a["tokens"].shape == (4, 16)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_determinism():
+    cfg = get_config("smollm-135m").reduced()
+    a = next(lm_batches(cfg, 4, 8, seed=3, steps=1))
+    b = next(lm_batches(cfg, 4, 8, seed=3, steps=1))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_vla_batches():
+    cfg = get_config("molmoact-7b").reduced()
+    b = next(vla_batches(cfg, 2, steps=1))
+    n = cfg.n_prompt_tokens + cfg.n_cot_tokens + cfg.action.num_action_tokens
+    assert b["tokens"].shape == (2, n)
+    # action tokens live in the top-of-vocab bins
+    assert b["tokens"][:, -cfg.action.num_action_tokens:].min() \
+        >= cfg.vocab_size - 256
+
+
+def test_prefetcher_preserves_order_and_count():
+    it = iter([{"x": np.full((1,), i)} for i in range(7)])
+    out = list(Prefetcher(it, depth=3))
+    assert [int(o["x"][0]) for o in out] == list(range(7))

@@ -1,0 +1,116 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
+pure-jnp oracle (interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention import ref as dref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import ref as fref
+from repro.kernels.moe_gmm import grouped_mlp
+from repro.kernels.moe_gmm import ref as gref
+from repro.kernels.ssd import ssd
+from repro.kernels.ssd import ref as sref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,N,K,h", [
+    (2, 256, 4, 2, 64), (1, 256, 8, 8, 64), (2, 128, 6, 2, 32),
+    (1, 512, 4, 1, 128), (2, 256, 16, 4, 64),
+])
+@pytest.mark.parametrize("window", [0, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, N, K, h, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, N, h), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, h), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, h), dtype)
+    out = flash_attention(q, k, v, window=window, interpret=True)
+    exp = fref.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,N,K,h,idx", [
+    (2, 1024, 8, 2, 64, 700), (1, 512, 4, 4, 64, 511),
+    (2, 1024, 16, 4, 128, 900), (1, 512, 8, 1, 64, 0),
+    (3, 768, 6, 2, 32, 300),
+])
+@pytest.mark.parametrize("window", [0, 256])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, S, N, K, h, idx, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, N, h), dtype)
+    kc = jax.random.normal(ks[1], (B, S, K, h), dtype)
+    vc = jax.random.normal(ks[2], (B, S, K, h), dtype)
+    out = decode_attention(q, kc, vc, idx, window=window, bk=256,
+                           interpret=True)
+    exp = dref.decode_attention_ref(q, kc, vc, idx, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,Q", [
+    (2, 256, 4, 64, 128, 128), (1, 128, 2, 32, 64, 64),
+    (2, 512, 3, 64, 128, 128), (1, 256, 8, 16, 32, 64),
+])
+def test_ssd_vs_sequential(B, S, H, P, N, Q):
+    ks = jax.random.split(KEY, 5)
+    xs = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.5)
+    B_ = 0.3 * jax.random.normal(ks[3], (B, S, 1, N), jnp.float32)
+    C_ = 0.3 * jax.random.normal(ks[4], (B, S, 1, N), jnp.float32)
+    y, st = ssd(xs, dt, A_log, B_, C_, Q=Q, interpret=True)
+    y_ref, st_ref = sref.ssd_scan_ref(xs, dt, A_log, B_, C_)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=5e-4, rtol=5e-3)
+
+
+def test_ssd_chunked_matches_kernel():
+    """The XLA fallback (ssd_chunked) and the Pallas kernel agree."""
+    ks = jax.random.split(KEY, 5)
+    B, S, H, P, N = 2, 256, 4, 32, 64
+    xs = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.5)
+    B_ = 0.3 * jax.random.normal(ks[3], (B, S, 1, N))
+    C_ = 0.3 * jax.random.normal(ks[4], (B, S, 1, N))
+    y1, s1 = ssd(xs, dt, A_log, B_, C_, interpret=True)
+    y2, s2 = sref.ssd_chunked(xs, dt, A_log, B_, C_)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=2e-4, rtol=2e-3)
+
+
+@pytest.mark.parametrize("E,C,D,F,act", [
+    (4, 128, 256, 512, "silu"), (8, 64, 128, 96, "gelu"),
+    (2, 256, 64, 128, "gelu_plain"), (16, 32, 64, 64, "silu"),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm(E, C, D, F, act, dtype):
+    ks = jax.random.split(KEY, 4)
+    xe = 0.3 * jax.random.normal(ks[0], (E, C, D), dtype)
+    wi = 0.3 * jax.random.normal(ks[1], (E, D, F), dtype)
+    wg = 0.3 * jax.random.normal(ks[2], (E, D, F), dtype)
+    wo = 0.3 * jax.random.normal(ks[3], (E, F, D), dtype)
+    out = grouped_mlp(xe, wi, wg, wo, act, interpret=True)
+    exp = np.asarray(gref.grouped_mlp_ref(xe, wi, wg, wo, act), np.float32)
+    # bf16: the intermediate h is quantized in both kernel and ref; error
+    # scales with output magnitude (two D/F-deep accumulations), so atol
+    # scales with max|exp| (~bf16 eps of the output scale)
+    tol = _tol(dtype)
+    if dtype == jnp.bfloat16:
+        tol = dict(atol=0.02 * float(np.abs(exp).max()) + 1e-3, rtol=5e-2)
+    np.testing.assert_allclose(np.asarray(out, np.float32), exp, **tol)

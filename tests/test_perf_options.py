@@ -1,0 +1,72 @@
+"""§Perf optimization options must preserve correctness exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+from conftest import reduced_params
+
+
+def test_window_cache_ring_matches_full():
+    """Ring-buffer KV cache (window_cache) decodes identically to a full
+    cache, including past the ring-wrap boundary."""
+    cfg, params = reduced_params("gemma3-27b")   # local windows = 32 reduced
+    o_full = ModelOptions(remat=False)
+    o_ring = ModelOptions(remat=False, window_cache=True)
+    B, S0, n = 1, 8, 40
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S0 + n), 0,
+                             cfg.vocab_size)
+    lf, cf = M.prefill(cfg, o_full, params, {"tokens": tok[:, :S0]}, 64,
+                       cache_dtype=jnp.float32)
+    lr, cr = M.prefill(cfg, o_ring, params, {"tokens": tok[:, :S0]}, 64,
+                       cache_dtype=jnp.float32)
+    errs = [float(jnp.abs(lf - lr).max())]
+    for i in range(n):
+        lf, cf = M.decode_step(cfg, o_full, params, tok[:, S0+i:S0+i+1],
+                               cf, S0 + i)
+        lr, cr = M.decode_step(cfg, o_ring, params, tok[:, S0+i:S0+i+1],
+                               cr, S0 + i)
+        errs.append(float(jnp.abs(lf - lr).max()))
+    assert max(errs) < 1e-4, errs
+
+
+def test_ring_cache_is_smaller():
+    from repro.models import stacks
+    cfg = get_config("gemma3-27b").reduced()
+    full = stacks.cache_template(cfg, 1, 256, opts=ModelOptions())
+    ring = stacks.cache_template(cfg, 1, 256,
+                                 opts=ModelOptions(window_cache=True))
+    sz = lambda t: sum(np.prod(l.shape) for l in jax.tree.leaves(
+        t, is_leaf=lambda x: hasattr(x, "axes")))
+    assert sz(ring) < 0.5 * sz(full)
+
+
+def test_causal_pairs_matches_dense():
+    key = jax.random.PRNGKey(0)
+    B, S, N, K, h = 2, 512, 4, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, N, h))
+    k = jax.random.normal(ks[1], (B, S, K, h))
+    v = jax.random.normal(ks[2], (B, S, K, h))
+    pos = jnp.arange(S)
+    for w in (0, 96):
+        d = L.attention_dense(q, k, v, pos, pos, w)
+        cp = L.attention_flash_ref(q, k, v, pos, pos, w, 128,
+                                   causal_pairs=True)
+        np.testing.assert_allclose(np.asarray(cp), np.asarray(d),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_lm_head_layout_tied_and_untied():
+    """[V,D] head layout: logits must equal x @ head.T for both modes."""
+    for name in ("arctic-480b", "qwen1.5-0.5b"):   # untied / tied
+        cfg, params = reduced_params(name)
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 3, cfg.d_model))
+        from repro.models.model import _logits
+        lg = _logits(params, x, cfg)
+        assert lg.shape == (1, 3, cfg.vocab_size)
+        assert bool(jnp.isfinite(lg).all())

@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import GLOBAL_WINDOW
+from repro.core.workload import Op, _expected_experts_hit
+from repro.core.xpu_sim import op_time
+from repro.core.hardware import ORIN, TPU_V5E, get_hardware
+from repro.models import layers as L
+from repro.training.compress import quantize_int8, dequantize_int8
+
+SET = dict(max_examples=20, deadline=None)
+
+
+@given(st.integers(1, 4), st.integers(1, 8), st.integers(0, 3),
+       st.integers(1, 4))
+@settings(**SET)
+def test_attention_rows_sum_to_one(b, s_blocks, kv_ratio, kheads):
+    """Softmax weights partition unity => output of attention over constant
+    V equals that constant (any mask, any GQA grouping)."""
+    S = 16 * s_blocks
+    K, G = kheads, kv_ratio + 1
+    N = K * G
+    key = jax.random.PRNGKey(b * 100 + S)
+    q = jax.random.normal(key, (b, S, N, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, S, K, 8))
+    v = jnp.ones((b, S, K, 8))
+    pos = jnp.arange(S)
+    out = L.attention_dense(q, k, v, pos, pos, GLOBAL_WINDOW)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.sampled_from([8, 16, 32]))
+@settings(**SET)
+def test_rope_preserves_norm(b, s, hd):
+    key = jax.random.PRNGKey(b + s)
+    x = jax.random.normal(key, (b, s, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    y = L.rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+@given(st.integers(0, 5))
+@settings(**SET)
+def test_rope_relative_position_invariance(shift):
+    """<rope(q,p), rope(k,p')> depends only on p - p'."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    def dot(p_q, p_k):
+        qq = L.rope(q, jnp.asarray([[p_q]]), 10_000.0)
+        kk = L.rope(k, jnp.asarray([[p_k]]), 10_000.0)
+        return float(jnp.sum(qq * kk))
+    assert dot(3, 1) == pytest.approx(dot(3 + shift, 1 + shift), abs=1e-4)
+
+
+@given(st.integers(2, 64), st.integers(1, 8),
+       st.floats(1.0, 64.0))
+@settings(**SET)
+def test_expected_experts_monotone(E, k, tokens):
+    k = min(k, E)
+    h1 = _expected_experts_hit(E, k, tokens)
+    h2 = _expected_experts_hit(E, k, tokens * 2)
+    assert 0 < h1 <= h2 <= E + 1e-9
+
+
+@given(st.floats(1e3, 1e15), st.floats(1e3, 1e12))
+@settings(**SET)
+def test_roofline_time_lower_bounds(flops, bytes_):
+    op = Op("x", "gemm", flops, bytes_, 0.0)
+    for hw in (ORIN, TPU_V5E, get_hardware("orin+pim")):
+        t = op_time(op, hw)
+        assert t.t >= t.t_compute and t.t >= t.t_memory
+        assert t.t > 0
+
+
+@given(st.lists(st.floats(-100, 100), min_size=4, max_size=64))
+@settings(**SET)
+def test_int8_quantization_bounded_error(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = quantize_int8(x)
+    err = float(jnp.abs(dequantize_int8(q, s) - x).max())
+    assert err <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(1, 3), st.sampled_from([32, 64]), st.integers(1, 4))
+@settings(max_examples=8, deadline=None)
+def test_ssd_chunk_size_invariance(b, S, h):
+    """SSD output must not depend on the chunk size."""
+    key = jax.random.PRNGKey(b * 7 + S + h)
+    ks = jax.random.split(key, 5)
+    P, N = 8, 16
+    xs = jax.random.normal(ks[0], (b, S, h, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, h)))
+    A = jax.random.uniform(ks[2], (h,), minval=0.0, maxval=1.0)
+    B_ = 0.3 * jax.random.normal(ks[3], (b, S, 1, N))
+    C_ = 0.3 * jax.random.normal(ks[4], (b, S, 1, N))
+    y1, s1 = L.ssd_chunked(xs, dt, A, B_, C_, chunk=16)
+    y2, s2 = L.ssd_chunked(xs, dt, A, B_, C_, chunk=S)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=2e-4, rtol=2e-3)
+
+
+@given(st.integers(2, 6), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_moe_gate_weights_normalized(e, k):
+    """MoE output is a convex combination: constant expert outputs =>
+    constant output regardless of routing."""
+    k = min(k, e)
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.layers import ModelOptions, moe
+    cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
+                              num_experts=e, top_k=k, moe_d_ff=8)
+    key = jax.random.PRNGKey(e * 10 + k)
+    D = cfg.d_model
+    p = {
+        "router": jax.random.normal(key, (D, e)),
+        "moe_wi": jnp.zeros((e, D, 8)),
+        "moe_wg": jnp.zeros((e, D, 8)),
+        "moe_wo": jnp.zeros((e, 8, D)),
+    }
+    x = jax.random.normal(key, (2, 4, D))
+    out = moe(p, x, cfg, ModelOptions(moe_capacity_factor=float(e)))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)

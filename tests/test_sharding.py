@@ -1,0 +1,63 @@
+"""Logical-axis sharding rules: divisibility fallback, no double-use of a
+physical axis, batch over (pod, data)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import spec_for
+from repro.models.model import model_template
+from repro.models.params import PSpec, param_count
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisible_dims_shard():
+    s = spec_for((49152, 576), ("vocab", "embed"), MESH)
+    assert s == P("model", "data")
+
+
+def test_indivisible_dim_replicates():
+    # smollm: 9 heads don't divide 16 -> replicate; head_dim stays None
+    s = spec_for((576, 9, 64), ("embed", "heads", "head_dim"), MESH)
+    assert s == P("data", None, None)
+
+
+def test_no_double_use():
+    # experts take 'model'; mlp would also map to 'model' -> dropped
+    s = spec_for((128, 7168, 4864), ("experts", "embed", "mlp"), MESH)
+    assert s == P("model", "data", None)
+
+
+def test_batch_over_pod_and_data():
+    s = spec_for((256, 4096), ("batch", "act_seq"), MESH3)
+    assert s == P(("pod", "data"), None)
+    # batch=1 (long_500k) can't shard -> replicated
+    s1 = spec_for((1, 4096), ("batch", "act_seq"), MESH3)
+    assert s1 == P(None, None)
+
+
+def test_batch_partial_divisibility():
+    # batch 16 with pod*data=32: drops trailing axes until divisible
+    s = spec_for((16, 8), ("batch", None), MESH3)
+    assert s == P("pod", None) or s == P(("pod",), None)
+
+
+def test_every_arch_has_sharded_params():
+    """Each arch's biggest params must actually shard (storage feasibility)."""
+    for name in ("gemma3-27b", "arctic-480b", "jamba-1.5-large-398b"):
+        cfg = get_config(name)
+        t = model_template(cfg)
+        leaves = jax.tree.leaves(t, is_leaf=lambda x: isinstance(x, PSpec))
+        big = sorted(leaves, key=lambda l: -param_count({"x": l}))[:5]
+        for spec in big:
+            ps = spec_for(spec.shape, spec.axes, MESH)
+            assert any(e is not None for e in ps), \
+                f"{name}: large tensor {spec.shape} fully replicated"

@@ -1,0 +1,79 @@
+"""End-to-end behaviour: the training driver converges, resumes from
+checkpoint after injected failure; the serving driver completes; the
+roofline report machinery handles real artifacts."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch.train import main as train_main
+from repro.launch.serve import main as serve_main
+from repro.roofline import collective_bytes, markdown_table, to_terms
+from repro.roofline.report import RooflineTerms
+
+
+def test_train_driver_end_to_end(tmp_path):
+    losses = train_main([
+        "--arch", "smollm-135m", "--reduced", "--steps", "30",
+        "--batch", "8", "--seq", "32", "--lr", "5e-3",
+        "--ckpt", str(tmp_path / "ck"), "--save-every", "10",
+        "--simulate-failure", "15", "--log-every", "100",
+    ])
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+    # a checkpoint exists and is loadable
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path / "ck")) is not None
+
+
+def test_serve_driver_end_to_end():
+    done = serve_main(["--arch", "smollm-135m", "--reduced",
+                       "--requests", "5", "--slots", "2",
+                       "--prompt-len", "8", "--max-tokens", "4",
+                       "--max-seq", "48"])
+    assert len(done) == 5
+    assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def test_collective_parser():
+    hlo = """
+  %ar = f32[1024,16]{1,0} all-reduce(f32[1024,16] %x), replica_groups={}
+  %ag.1 = bf16[2048]{0} all-gather(bf16[128] %y), dimensions={0}
+  %cp = f32[64,64]{1,0} collective-permute(f32[64,64] %z)
+  %t = (f32[16], f32[32]) all-to-all(f32[16] %a, f32[32] %b)
+"""
+    c = collective_bytes(hlo)
+    assert c["all-reduce"] == 1024 * 16 * 4
+    assert c["all-gather"] == 2048 * 2
+    assert c["collective-permute"] == 64 * 64 * 4
+    assert c["all-to-all"] == 16 * 4 + 32 * 4
+    assert c["total"] == sum(v for k, v in c.items() if k != "total")
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(arch="x", shape="train_4k", mesh="single_pod",
+                      flops_per_dev=197e12, bytes_per_dev=819e9,
+                      coll_bytes_per_dev=50e9, model_flops=197e12 * 256)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(1.0)
+    assert t.t_collective == pytest.approx(1.0)
+    assert t.useful_flops_ratio == pytest.approx(1.0)
+    assert t.roofline_fraction == pytest.approx(1.0)
+    assert "train_4k" in markdown_table([t])
+
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+@pytest.mark.skipif(not os.path.isdir(ART) or not os.listdir(ART),
+                    reason="no dry-run artifacts yet")
+def test_dryrun_artifacts_consistent():
+    from repro.roofline import load_artifacts
+    rows = [r for r in load_artifacts(ART) if "skipped" not in r]
+    assert rows, "artifacts dir has no successful cells"
+    for r in rows:
+        t = to_terms(r)
+        assert t.flops_per_dev > 0
+        assert t.bytes_per_dev > 0
+        assert t.bound_time > 0

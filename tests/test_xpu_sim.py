@@ -1,0 +1,97 @@
+"""The paper's simulator: validate every published claim + internal
+consistency of the roofline machinery."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import claims
+from repro.core.hardware import (CATALOG, ORIN, TABLE1, THOR, TPU_V5E,
+                                 get_hardware)
+from repro.core.scaling import scaled_vla, scaling_sweep
+from repro.core.workload import build_vla_step, workload_totals
+from repro.core.xpu_sim import simulate_phases, simulate_vla
+
+
+@pytest.mark.parametrize("name", list(claims.ALL_CLAIMS))
+def test_paper_claim(name):
+    ok, measured, expect = claims.ALL_CLAIMS[name]()
+    assert ok, f"{name}: measured {measured} vs expected {expect}"
+
+
+def test_table1_catalog():
+    assert len(TABLE1) == 7
+    assert ORIN.mem_bw_gbs == 203 and ORIN.bf16_tflops == 100
+    assert THOR.mem_bw_gbs == 273 and THOR.bf16_tflops == 500
+    assert get_hardware("orin+pim").total_tflops == 1074
+    assert get_hardware("thor+pim").total_tflops == 3993
+    assert get_hardware("orin+gddr7").mem_bw_gbs == 1000
+
+
+def test_prefetch_never_slower():
+    """Cross-operator prefetch lower-bounds at max(sum_c, sum_m) <= sum(max)."""
+    cfg = get_config("molmoact-7b")
+    for hw in (ORIN, THOR, TPU_V5E):
+        for p in simulate_vla(cfg, hw).phases:
+            assert p.t_prefetch <= p.t_per_op + 1e-12
+
+
+def test_decode_latency_scales_with_params():
+    """Memory-bound decode: latency ~ active params / bw."""
+    small = simulate_vla(get_config("smollm-135m"), ORIN)
+    big = simulate_vla(get_config("gemma3-27b"), ORIN)
+    r = (big.phase_seconds()["generation_decode"]
+         / small.phase_seconds()["generation_decode"])
+    n_ratio = (get_config("gemma3-27b").param_counts()["active"]
+               / get_config("smollm-135m").param_counts()["active"])
+    assert 0.3 * n_ratio < r < 3 * n_ratio
+
+
+def test_moe_decode_cheaper_than_dense_equivalent():
+    """MoE decode bytes ~ active params, not total."""
+    moe = simulate_vla(get_config("granite-moe-3b-a800m"), ORIN)
+    dense = simulate_vla(get_config("granite-3-2b"), ORIN)
+    assert (moe.phase_seconds()["generation_decode"]
+            < dense.phase_seconds()["generation_decode"])
+
+
+def test_scaling_sweep_hits_targets():
+    for cfg, target in zip(scaling_sweep((30e9, 100e9)), (30e9, 100e9)):
+        n = cfg.param_counts()["total"]
+        assert abs(n - target) / target < 0.25, (cfg.name, n)
+
+
+def test_control_frequency_monotone_in_bandwidth():
+    cfg = scaled_vla(30e9)
+    freqs = [simulate_vla(cfg, get_hardware(h)).control_freq_hz
+             for h in ("jetson-orin", "orin+lpddr5x", "orin+gddr7",
+                       "orin+pim")]
+    assert all(a < b for a, b in zip(freqs, freqs[1:])), freqs
+
+
+def test_pim_routes_memory_bound_ops():
+    cfg = get_config("molmoact-7b")
+    rep = simulate_vla(cfg, get_hardware("orin+pim"))
+    decode = [p for p in rep.phases if p.name == "generation_decode"][0]
+    pim_ops = [o for o in decode.op_times if o.on_pim]
+    assert pim_ops, "no ops routed to PIM"
+    # compute-heavy prefill ops stay on SoC
+    prefill = [p for p in rep.phases if p.name == "generation_prefill"][0]
+    gemm_ops = [o for o in prefill.op_times if o.op.kind == "gemm"]
+    assert all(not o.on_pim for o in gemm_ops)
+
+
+def test_workload_totals_positive():
+    for arch in ("molmoact-7b", "mamba2-780m", "whisper-small",
+                 "jamba-1.5-large-398b"):
+        t = workload_totals(build_vla_step(get_config(arch)))
+        assert t["flops"] > 0 and t["bytes"] > 0
+
+
+def test_vla_flops_roughly_2nd():
+    """Decode-step FLOPs should be ~2*N_active per token."""
+    cfg = get_config("molmoact-7b")
+    phases = build_vla_step(cfg)
+    dec = [p for p in phases if p.name == "generation_decode"][0]
+    per_tok = sum(o.flops for o in dec.ops)
+    n = cfg.param_counts()["active"]
+    assert 1.5 * n < per_tok < 3.5 * n
