@@ -1,0 +1,78 @@
+"""Fused vs per-token reference serving engine: host syncs and tokens/s.
+
+The fused tick (lax.while_loop over up to K decode steps with device-resident
+per-slot state) must (a) emit bit-identical greedy token streams and (b) cut
+decode-path host syncs from N to <= ceil(N/K) for an N-token decode — the
+per-step launch/sync overhead the paper identifies as first-order for the
+memory-bound action-generation phase. Violations raise, so the benchmark
+doubles as a CI smoke gate for the serving stack.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+from repro.serving import Request, ServingEngine
+
+ARCH = "smollm-135m"
+K = 8          # fused tick size
+N = 17         # tokens per request (1 prefill + N-1 decode)
+
+
+def _run_engine(cfg, opts, params, fused, n_slots, prompts, max_tokens):
+    eng = ServingEngine(cfg, opts, params, n_slots=n_slots, max_seq=64,
+                        eos=-999, fused=fused, tick_tokens=K)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p.copy(), max_tokens=max_tokens))
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    return {r.uid: r.out_tokens for r in done}, eng.stats, wall
+
+
+def run(emit):
+    cfg = get_config(ARCH).reduced()
+    opts = ModelOptions(remat=False)
+    params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    rng = np.random.default_rng(0)
+
+    # -- single stream: the ceil(N/K) host-sync contract -------------------
+    prompt = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)]
+    results = {}
+    for mode, fused in (("ref", False), ("fused", True)):
+        toks, st, wall = _run_engine(cfg, opts, params, fused, 1, prompt, N)
+        results[mode] = (toks, st)
+        n_tok = sum(len(v) for v in toks.values())
+        emit(f"engine/{mode}/single_stream", wall / n_tok * 1e6,
+             f"tok_s={n_tok / wall:.1f};decode_syncs={st.decode_syncs}")
+    ref_toks, ref_st = results["ref"]
+    fus_toks, fus_st = results["fused"]
+    bound = math.ceil((N - 1) / K)     # N-1 decode steps after prefill
+    assert fus_toks == ref_toks, "fused decode diverged from reference"
+    assert fus_st.decode_syncs <= bound, \
+        f"fused syncs {fus_st.decode_syncs} > ceil(N/K) = {bound}"
+    assert ref_st.decode_syncs == N - 1
+    emit("engine/fused/sync_bound", float(fus_st.decode_syncs),
+         f"bound={bound};ref={ref_st.decode_syncs};match=True")
+
+    # -- continuous batching: mixed lengths, more requests than slots ------
+    prompts = [rng.integers(0, cfg.vocab_size, int(l), dtype=np.int32)
+               for l in (6, 9, 4, 7)]
+    batch = {}
+    for mode, fused in (("ref", False), ("fused", True)):
+        toks, st, wall = _run_engine(cfg, opts, params, fused, 2, prompts, 12)
+        batch[mode] = toks
+        n_tok = sum(len(v) for v in toks.values())
+        emit(f"engine/{mode}/batched", wall / n_tok * 1e6,
+             f"tok_s={n_tok / wall:.1f};decode_syncs={st.decode_syncs};"
+             f"device_steps={st.device_steps}")
+    assert batch["fused"] == batch["ref"], \
+        "fused continuous batching diverged from reference"

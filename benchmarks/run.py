@@ -9,9 +9,9 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (claims_check, decode_microbench, fig2_phase_latency,
-                        fig3_control_frequency, perf_compare, roofline_report,
-                        table1_hardware)
+from benchmarks import (claims_check, decode_microbench, engine_bench,
+                        fig2_phase_latency, fig3_control_frequency,
+                        perf_compare, roofline_report, table1_hardware)
 
 MODULES = {
     "claims": claims_check,
@@ -21,6 +21,7 @@ MODULES = {
     "roofline": roofline_report,
     "perf": perf_compare,
     "micro": decode_microbench,
+    "engine": engine_bench,
 }
 
 

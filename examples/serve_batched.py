@@ -1,9 +1,12 @@
 """Serve a small model with continuously-batched requests (vLLM-style slots,
-per-slot cache positions) and report the phase latency decomposition per
-request — the paper's measurement, taken on our own serving engine.
+per-slot cache positions) through the fused device-resident decode loop, and
+report the phase latency decomposition plus the host-sync contract — the
+paper's measurement, taken on our own serving engine.
 
-    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py [--reference]
 """
+import argparse
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -14,12 +17,20 @@ from repro.models.layers import ModelOptions
 from repro.serving import Request, ServingEngine
 
 
-def main():
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--reference", action="store_true",
+                   help="per-token reference path (one host sync per token)")
+    p.add_argument("--tick-tokens", type=int, default=8)
+    args = p.parse_args(argv)
+
     cfg = get_config("qwen1.5-0.5b").reduced()
     opts = ModelOptions(remat=False)
     params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
-    eng = ServingEngine(cfg, opts, params, n_slots=4, max_seq=96, eos=-1)
+    eng = ServingEngine(cfg, opts, params, n_slots=4, max_seq=96, eos=-1,
+                        fused=not args.reference,
+                        tick_tokens=args.tick_tokens)
 
     rng = np.random.default_rng(0)
     for i in range(12):
@@ -28,10 +39,21 @@ def main():
             max_tokens=int(rng.integers(6, 14))))
     done = eng.run()
 
+    st = eng.stats
     toks = sum(len(r.out_tokens) for r in done)
     span = max(r.t_done for r in done) - min(r.t_submit for r in done)
+    mode = "reference" if args.reference else "fused"
     print(f"{len(done)} requests, {toks} tokens, {toks/span:.1f} tok/s "
-          f"aggregate with continuous batching")
+          f"aggregate with continuous batching ({mode} decode path)")
+    contract = (f"host-sync contract: {st.decode_syncs} decode syncs for "
+                f"{st.tokens_decoded} decoded tokens over "
+                f"{st.device_steps} device steps")
+    if not args.reference:
+        contract += f" (reference path would pay {st.device_steps})"
+    print(contract)
+    ph = st.phase_report()
+    print(f"engine phases: vision {ph['vision']:.3f}s | "
+          f"prefill {ph['prefill']:.3f}s | decode {ph['decode']:.3f}s")
     print("per-request phases (queue+prefill | decode):")
     for r in sorted(done, key=lambda r: r.uid)[:6]:
         print(f"  req {r.uid:2d}: {r.t_prefill - r.t_submit:6.3f}s | "

@@ -35,19 +35,11 @@ def _greedy(logits):
 
 def decode_tokens(cfg: ModelConfig, opts: ModelOptions, params, first_token,
                   caches, start_index: int, n_steps: int):
-    """Autoregressive greedy decode of n_steps tokens via lax.scan.
-    Returns (tokens [B, n_steps], last_hidden_logits, caches)."""
-
-    def step(carry, i):
-        tok, caches = carry
-        logits, caches = M.decode_step(cfg, opts, params, tok, caches,
-                                       start_index + i)
-        nxt = _greedy(logits)
-        return (nxt, caches), nxt[:, 0]
-
-    (last, caches), toks = jax.lax.scan(
-        step, (first_token, caches), jnp.arange(n_steps))
-    return jnp.moveaxis(toks, 0, 1), last, caches
+    """Autoregressive greedy decode of n_steps tokens, device-resident
+    (delegates to the shared fused loop the serving engine builds on).
+    Returns (tokens [B, n_steps], last_token, caches)."""
+    return M.decode_loop(cfg, opts, params, first_token, caches, start_index,
+                         n_steps)
 
 
 def vla_control_step(cfg: ModelConfig, opts: ModelOptions, params, batch,

@@ -5,16 +5,21 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _auto_kwargs(n):
+    # jax.sharding.AxisType only exists on newer jax; older versions get the
+    # default (equivalent) auto axis behaviour with no kwarg at all.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto_kwargs(len(axes)))
 
 
 def make_elastic_mesh(data: int, model: int = 16):
     """Reduced-data-axis mesh for elastic shrink after node loss."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return jax.make_mesh((data, model), ("data", "model"), **_auto_kwargs(2))

@@ -31,6 +31,9 @@ def main(argv=None):
     p.add_argument("--max-tokens", type=int, default=16)
     p.add_argument("--max-seq", type=int, default=128)
     p.add_argument("--reduced", action="store_true")
+    p.add_argument("--reference", action="store_true",
+                   help="per-token decode path instead of the fused tick")
+    p.add_argument("--tick-tokens", type=int, default=8)
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -40,7 +43,9 @@ def main(argv=None):
     params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
     eng = ServingEngine(cfg, opts, params, n_slots=args.slots,
-                        max_seq=args.max_seq, eos=-1)
+                        max_seq=args.max_seq, eos=-1,
+                        fused=not args.reference,
+                        tick_tokens=args.tick_tokens)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -54,6 +59,10 @@ def main(argv=None):
     toks = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {len(done)} requests, {toks} tokens in {wall:.2f}s "
           f"({toks / wall:.1f} tok/s aggregate)")
+    st = eng.stats
+    print(f"[serve] {st.decode_syncs} decode host syncs / "
+          f"{st.device_steps} device steps "
+          f"({'fused' if not args.reference else 'reference'} path)")
     for r in done[:4]:
         print(f"  req {r.uid}: queue {r.t_prefill - r.t_submit:.3f}s "
               f"decode {r.t_done - r.t_prefill:.3f}s "

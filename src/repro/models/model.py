@@ -25,7 +25,8 @@ from repro.models.params import PSpec, init_params, param_shapes  # re-export
 from repro.models.stacks import init_caches  # re-export
 
 __all__ = ["model_template", "forward", "prefill", "decode_step",
-           "init_params", "init_caches", "ModelOptions"]
+           "decode_loop", "encode_vision", "init_params", "init_caches",
+           "ModelOptions"]
 
 
 def model_template(cfg: ModelConfig) -> Dict:
@@ -67,10 +68,25 @@ def _encode_context(params, batch, cfg: ModelConfig, opts: ModelOptions):
     if cfg.encoder is not None:  # whisper: cross-attention context
         ctx = stacks.apply_tower(params["encoder"], batch["frames"],
                                  cfg.encoder, opts)
-    if cfg.vision is not None:   # VLM: prefix tokens in the LM sequence
+    if "prefix" in batch:        # precomputed vision prefix (see encode_vision)
+        prefix = batch["prefix"]
+    elif cfg.vision is not None:
+        if "patches" not in batch:
+            raise KeyError("vision model needs batch['patches'] "
+                           "(or a precomputed batch['prefix'])")
+        # VLM: prefix tokens in the LM sequence
         prefix = stacks.apply_tower(params["vision"], batch["patches"],
                                     cfg.vision, opts)
     return ctx, prefix
+
+
+def encode_vision(cfg: ModelConfig, opts: ModelOptions, params, patches):
+    """Vision tower alone: patches [B,T,e] -> prefix embeds [B,T,d_model].
+    ``prefill``/``forward`` accept the result as ``batch['prefix']``, so the
+    serving engine can time the vision phase separately from prefill (the
+    paper's phase decomposition)."""
+    assert cfg.vision is not None, "encode_vision requires a vision tower"
+    return stacks.apply_tower(params["vision"], patches, cfg.vision, opts)
 
 
 def _logits(params, x, cfg: ModelConfig):
@@ -134,6 +150,29 @@ def decode_step(cfg: ModelConfig, opts: ModelOptions, params, token,
                                      positions, caches=caches,
                                      cache_index=index)
     return _logits(params, x, cfg), caches
+
+
+def decode_loop(cfg: ModelConfig, opts: ModelOptions, params, token, caches,
+                index, n_steps: int, sample_fn=None):
+    """``n_steps`` autoregressive decode steps fused on-device via lax.scan —
+    one XLA dispatch instead of ``n_steps`` host round-trips.
+
+    index: scalar start position or per-slot [B] vector (continuous
+    batching); advanced by 1 every step. ``sample_fn`` maps logits [B,1,V]
+    -> tokens [B] (greedy when None).
+    Returns (tokens [B, n_steps], last_token [B,1], caches)."""
+    idx = jnp.asarray(index, jnp.int32)
+
+    def step(carry, _):
+        tok, caches, idx = carry
+        logits, caches = decode_step(cfg, opts, params, tok, caches, idx)
+        nxt = (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+               if sample_fn is None else sample_fn(logits))[:, None]
+        return (nxt, caches, idx + 1), nxt[:, 0]
+
+    (last, caches, _), toks = jax.lax.scan(step, (token, caches, idx),
+                                           None, length=n_steps)
+    return jnp.moveaxis(toks, 0, 1), last, caches
 
 
 def generate_actions_dit(cfg: ModelConfig, params, cond_hidden, key):

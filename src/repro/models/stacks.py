@@ -376,6 +376,18 @@ def cache_template(cfg: ModelConfig, batch: int, max_seq: int,
     return t
 
 
+def cache_batch_axis(path) -> int:
+    """Batch axis of a cache leaf, from its position in the cache pytree.
+
+    Leaves under ``blocks`` are layer-stacked by ``stack(...)`` so batch sits
+    behind the scan dim at axis 1; ``tail`` leaves carry batch at axis 0. This
+    is the explicit annotation the serving engine's slot scatter relies on
+    (shape inference breaks down when slot and prefill caches coincide, e.g.
+    n_slots == 1)."""
+    key = getattr(path[0], "key", path[0])
+    return 1 if key == "blocks" else 0
+
+
 def cache_dtype(path_key: str, dtype):
     # SSM recurrent state is kept fp32 (it integrates over the whole stream).
     return jnp.float32 if path_key == "ssm" else dtype

@@ -1,4 +1,5 @@
-from repro.serving.engine import Request, ServingEngine
-from repro.serving.sampler import greedy, sample
+from repro.serving.engine import EngineStats, Request, ServingEngine
+from repro.serving.sampler import greedy, sample, sample_token
 
-__all__ = ["Request", "ServingEngine", "greedy", "sample"]
+__all__ = ["EngineStats", "Request", "ServingEngine", "greedy", "sample",
+           "sample_token"]

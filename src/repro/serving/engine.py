@@ -1,18 +1,33 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with a device-resident decode loop.
 
-Decode runs as one jitted step over a fixed slot batch [B_slots]; each slot
-carries its own cache position (per-slot `index` vector — see
-layers.update_cache / attention_decode). Finished slots are refilled from
-the request queue via a jitted prefill whose cache slice is scattered into
-the slot cache. This is vLLM-style continuous batching re-expressed in fixed
-shapes (the XLA-friendly formulation): no recompilation on admit/evict.
+Decode runs over a fixed slot batch [B_slots]; each slot carries its own
+cache position (per-slot `index` vector — see layers.update_cache /
+attention_decode). Finished slots are refilled from the request queue via a
+jitted prefill whose cache slice is scattered into the slot cache. This is
+vLLM-style continuous batching re-expressed in fixed shapes (the
+XLA-friendly formulation): no recompilation on admit/evict.
+
+Two decode paths:
+
+- **fused** (default): one jitted multi-token tick — a ``lax.while_loop``
+  over up to ``tick_tokens`` decode steps that carries per-slot
+  index/budget/done state as device arrays and fuses sampling into the step.
+  The host is consulted only when a slot finishes or the tick's token budget
+  is exhausted, so an N-token decode costs ~ceil(N/K) host syncs instead of
+  N. This attacks exactly the launch/sync overhead the paper identifies as
+  first-order for the memory-bound action-generation phase.
+- **reference**: the original one-token-per-tick path (``step()``), kept for
+  equivalence testing and as the bit-exactness oracle under greedy sampling.
 
 Phase latency accounting (vision / prefill / decode) is recorded per request
-— the serving-side counterpart of the paper's Nsight phase decomposition.
+and aggregated in ``EngineStats`` — the serving-side counterpart of the
+paper's Nsight phase decomposition — and survives the fusion: vision runs as
+its own jitted stage (``M.encode_vision`` feeding ``batch['prefix']``), and
+decode wall-time is attributed per tick.
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -24,6 +39,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.layers import ModelOptions
+from repro.models.stacks import cache_batch_axis
 from repro.serving import sampler as S
 
 
@@ -40,13 +56,115 @@ class Request:
     t_done: float = 0.0
 
 
+@dataclass
+class EngineStats:
+    """Host-sync contract + phase accounting for one engine lifetime.
+
+    A "sync" is a device->host readback that blocks the Python loop (the
+    per-token ``np.asarray``/``int()`` the paper's launch-overhead term maps
+    to). The fused path pays one per tick; the reference path one per token.
+    """
+    decode_syncs: int = 0       # blocking readbacks on the decode path
+    prefill_syncs: int = 0      # blocking readbacks at admission
+    ticks: int = 0              # engine ticks (fused or reference)
+    device_steps: int = 0       # decode steps executed on device
+    tokens_decoded: int = 0     # tokens emitted by the decode path
+    vision_time: float = 0.0
+    prefill_time: float = 0.0
+    decode_time: float = 0.0
+
+    def phase_report(self) -> Dict[str, float]:
+        """Figure-2-style wall-time decomposition."""
+        return {"vision": self.vision_time, "prefill": self.prefill_time,
+                "decode": self.decode_time}
+
+
+def _fused_tick(cfg: ModelConfig, opts: ModelOptions, K: int, eos: int,
+                temperature: float, top_k: int, stop_on_finish: bool,
+                params, tokens, caches, index, budget, done, key):
+    """Up to K decode steps on device. Per-slot carry: current token [B,1],
+    cache position index [B], remaining budget [B], done [B]. Emitted tokens
+    land in out [B,K] (each live slot fills a prefix of its row, length
+    n_emit[s]). Exits early when every slot is done or — with
+    ``stop_on_finish`` — as soon as any slot newly finishes, so the host can
+    refill it."""
+    B = tokens.shape[0]
+    out0 = jnp.full((B, K), -1, jnp.int32)
+    n_emit0 = jnp.zeros((B,), jnp.int32)
+    entry_done = done
+
+    def cond(c):
+        step, _, _, _, _, done, _, _, _ = c
+        go = (step < K) & ~jnp.all(done)
+        if stop_on_finish:
+            go &= ~jnp.any(done & ~entry_done)
+        return go
+
+    def body(c):
+        step, tokens, caches, index, budget, done, key, out, n_emit = c
+        logits, caches = M.decode_step(cfg, opts, params, tokens, caches,
+                                       index)
+        key, sub = jax.random.split(key)
+        nxt = S.sample_token(logits, sub, temperature, top_k)   # [B]
+        live = ~done
+        col = jnp.where(live, nxt, -1)[:, None]
+        out = jax.lax.dynamic_update_slice(out, col, (0, step))
+        n_emit = n_emit + live.astype(jnp.int32)
+        budget = jnp.where(live, budget - 1, budget)
+        newly = live & ((nxt == eos) | (budget <= 0))
+        index = jnp.where(live, index + 1, index)
+        tokens = jnp.where(live[:, None], nxt[:, None], tokens)
+        return (step + 1, tokens, caches, index, budget, done | newly, key,
+                out, n_emit)
+
+    init = (jnp.asarray(0, jnp.int32), tokens, caches, index, budget, done,
+            key, out0, n_emit0)
+    (steps, tokens, caches, index, budget, done, key, out, n_emit) = \
+        jax.lax.while_loop(cond, body, init)
+    return tokens, caches, index, budget, done, key, out, n_emit, steps
+
+
+# Jitted stages are cached per static signature (configs are frozen
+# dataclasses, hence hashable), so constructing many engines — tests, sweeps,
+# one engine per model replica — shares compiled code instead of re-tracing.
+@functools.lru_cache(maxsize=None)
+def _jit_decode(cfg: ModelConfig, opts: ModelOptions):
+    return jax.jit(lambda p, t, c, i: M.decode_step(cfg, opts, p, t, c, i))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill(cfg: ModelConfig, opts: ModelOptions, max_seq: int):
+    return jax.jit(lambda p, b: M.prefill(cfg, opts, p, b, max_seq,
+                                          cache_dtype=jnp.float32))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_vision(cfg: ModelConfig, opts: ModelOptions):
+    return jax.jit(lambda p, px: M.encode_vision(cfg, opts, p, px))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_tick(cfg: ModelConfig, opts: ModelOptions, tick_tokens: int,
+              eos: int, temperature: float, top_k: int,
+              stop_on_finish: bool):
+    return jax.jit(functools.partial(_fused_tick, cfg, opts, tick_tokens,
+                                     eos, temperature, top_k,
+                                     stop_on_finish))
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, opts: ModelOptions, params,
                  n_slots: int = 4, max_seq: int = 512, eos: int = 1,
-                 prompt_len: int = 64):
+                 prompt_len: int = 64, fused: bool = True,
+                 tick_tokens: int = 8, temperature: float = 0.0,
+                 top_k: int = 0, seed: int = 0, stop_on_finish: bool = True):
+        if tick_tokens < 1:
+            raise ValueError(f"tick_tokens must be >= 1, got {tick_tokens}")
         self.cfg, self.opts, self.params = cfg, opts, params
         self.n_slots, self.max_seq, self.eos = n_slots, max_seq, eos
         self.prompt_len = prompt_len
+        self.fused, self.tick_tokens = fused, tick_tokens
+        self.temperature, self.top_k = temperature, top_k
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * n_slots
@@ -54,12 +172,23 @@ class ServingEngine:
         self.budget = np.zeros(n_slots, np.int32)
         self.tokens = np.zeros((n_slots, 1), np.int32)
         self.caches = M.init_caches(cfg, n_slots, max_seq, jnp.float32, opts)
+        self.stats = EngineStats()
+        self.key = jax.random.PRNGKey(seed)
 
-        self._decode = jax.jit(
-            lambda p, t, c, i: M.decode_step(cfg, opts, p, t, c, i))
-        self._prefill = jax.jit(
-            lambda p, b: M.prefill(cfg, opts, p, b, max_seq,
-                                   cache_dtype=jnp.float32))
+        self._decode = _jit_decode(cfg, opts)
+        self._prefill = _jit_prefill(cfg, opts, max_seq)
+        self._vision = (_jit_vision(cfg, opts)
+                        if cfg.vision is not None else None)
+        self._tick = _jit_tick(cfg, opts, tick_tokens, eos, temperature,
+                               top_k, stop_on_finish)
+
+    def _sample_host(self, logits):
+        """Host-path sampling (admission + reference step) with the same
+        temperature/top_k config the fused tick uses; greedy by default."""
+        if self.temperature <= 0:
+            return S.greedy(logits)
+        self.key, sub = jax.random.split(self.key)
+        return S.sample_token(logits, sub, self.temperature, self.top_k)
 
     # -- queue -----------------------------------------------------------
     def submit(self, req: Request):
@@ -68,17 +197,33 @@ class ServingEngine:
 
     def _admit(self):
         for s in range(self.n_slots):
-            if self.slots[s] is None and self.queue:
+            # the inner loop retries the slot when a request already finishes
+            # at prefill (EOS first token, or max_tokens == 1)
+            while self.slots[s] is None and self.queue:
                 req = self.queue.pop(0)
+                t0 = time.perf_counter()
                 batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-                if req.patches is not None:
-                    batch["patches"] = jnp.asarray(req.patches[None])
+                n_prefix = 0
+                if req.patches is not None and self._vision is not None:
+                    prefix = self._vision(self.params,
+                                          jnp.asarray(req.patches[None]))
+                    prefix.block_until_ready()
+                    t1 = time.perf_counter()
+                    self.stats.vision_time += t1 - t0
+                    batch["prefix"] = prefix
+                    n_prefix = self.cfg.vision.num_tokens
+                    t0 = t1
                 logits, cache1 = self._prefill(self.params, batch)
+                tok = int(self._sample_host(logits)[0])
+                self.stats.prefill_syncs += 1
                 req.t_prefill = time.perf_counter()
-                tok = int(S.greedy(logits)[0])
+                self.stats.prefill_time += req.t_prefill - t0
                 req.out_tokens.append(tok)
-                n_prefix = (self.cfg.vision.num_tokens
-                            if self.cfg.vision is not None and req.patches is not None else 0)
+                if tok == self.eos or req.max_tokens <= 1:
+                    req.done = True
+                    req.t_done = req.t_prefill
+                    self.finished.append(req)
+                    continue
                 pos = n_prefix + len(req.prompt)
                 self.caches = _scatter_slot(self.caches, cache1, s)
                 self.index[s] = pos
@@ -88,14 +233,22 @@ class ServingEngine:
 
     # -- one engine tick ---------------------------------------------------
     def step(self) -> int:
+        """Reference path: one decode step, one host sync per token."""
         self._admit()
         active = [s for s in range(self.n_slots) if self.slots[s] is not None]
         if not active:
             return 0
+        t0 = time.perf_counter()
         logits, self.caches = self._decode(
             self.params, jnp.asarray(self.tokens), self.caches,
             jnp.asarray(self.index))
-        nxt = np.asarray(S.greedy(logits))
+        nxt = np.asarray(self._sample_host(logits))
+        now = time.perf_counter()
+        self.stats.decode_syncs += 1
+        self.stats.ticks += 1
+        self.stats.device_steps += 1
+        self.stats.tokens_decoded += len(active)
+        self.stats.decode_time += now - t0
         for s in active:
             req = self.slots[s]
             tok = int(nxt[s])
@@ -104,31 +257,70 @@ class ServingEngine:
             self.budget[s] -= 1
             if tok == self.eos or self.budget[s] <= 0:
                 req.done = True
-                req.t_done = time.perf_counter()
+                req.t_done = now
                 self.finished.append(req)
                 self.slots[s] = None
             else:
                 self.tokens[s, 0] = tok
         return len(active)
 
+    def step_fused(self) -> int:
+        """Fused path: up to ``tick_tokens`` decode steps per host sync."""
+        self._admit()
+        active = [s for s in range(self.n_slots) if self.slots[s] is not None]
+        if not active:
+            return 0
+        t0 = time.perf_counter()
+        done0 = np.asarray([self.slots[s] is None
+                            for s in range(self.n_slots)])
+        (tokens, self.caches, index, budget, done, self.key, out, n_emit,
+         steps) = self._tick(
+            self.params, jnp.asarray(self.tokens), self.caches,
+            jnp.asarray(self.index), jnp.asarray(self.budget),
+            jnp.asarray(done0), self.key)
+        out_h, n_emit_h, idx_h, bud_h, done_h, tok_h, steps_h = \
+            jax.device_get((out, n_emit, index, budget, done, tokens, steps))
+        now = time.perf_counter()
+        self.stats.decode_syncs += 1
+        self.stats.ticks += 1
+        self.stats.device_steps += int(steps_h)
+        self.stats.decode_time += now - t0
+        self.index = np.array(idx_h, np.int32)
+        self.budget = np.array(bud_h, np.int32)
+        self.tokens = np.array(tok_h, np.int32)
+        emitted = 0
+        for s in active:
+            req = self.slots[s]
+            k = int(n_emit_h[s])
+            req.out_tokens.extend(int(t) for t in out_h[s, :k])
+            emitted += k
+            if done_h[s]:
+                req.done = True
+                req.t_done = now
+                self.finished.append(req)
+                self.slots[s] = None
+        self.stats.tokens_decoded += emitted
+        return emitted
+
     def run(self, max_ticks: int = 10_000) -> List[Request]:
+        step = self.step_fused if self.fused else self.step
         ticks = 0
         while (self.queue or any(r is not None for r in self.slots)) \
                 and ticks < max_ticks:
-            self.step()
+            step()
             ticks += 1
         return self.finished
 
 
 def _scatter_slot(caches, cache1, slot: int):
     """Copy a batch-1 prefill cache into slot `slot` of the slot caches.
-    Block caches carry batch in dim 1 (behind the stacked layer dim), tail
-    caches in dim 0; we locate it as the first axis where the prefill cache
-    has extent 1 and the slot cache doesn't match."""
-    def scatter(big, small):
-        axis = next(i for i in range(big.ndim)
-                    if small.shape[i] == 1 and big.shape[i] != small.shape[i])
+    The batch axis of every leaf comes from the cache pytree's explicit
+    annotation (stacks.cache_batch_axis): block caches are layer-stacked, so
+    batch sits at axis 1; tail caches carry it at axis 0."""
+    def scatter(path, big, small):
+        axis = cache_batch_axis(path)
+        assert small.shape[axis] == 1, (path, small.shape, axis)
         idx = [slice(None)] * big.ndim
         idx[axis] = slice(slot, slot + 1)
         return big.at[tuple(idx)].set(small.astype(big.dtype))
-    return jax.tree.map(scatter, caches, cache1)
+    return jax.tree_util.tree_map_with_path(scatter, caches, cache1)

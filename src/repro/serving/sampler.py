@@ -19,3 +19,12 @@ def sample(logits, key, temperature: float = 1.0, top_k: int = 0):
         kth = jnp.sort(l, axis=-1)[:, -top_k][:, None]
         l = jnp.where(l < kth, -1e30, l)
     return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
+
+
+def sample_token(logits, key, temperature: float = 0.0, top_k: int = 0):
+    """Sampler fused into the engine's device-resident decode tick:
+    logits [B,1,V] -> tokens [B]. ``temperature``/``top_k`` are static at
+    trace time; temperature <= 0 selects greedy (key unused)."""
+    if temperature <= 0:
+        return greedy(logits)
+    return sample(logits, key, temperature, top_k)

@@ -8,6 +8,7 @@ import pytest
 
 from repro.checkpoint import (ResilientLoop, StepFailure, elastic_shrink,
                               latest_step, restore, save)
+from repro.launch.mesh import make_elastic_mesh
 
 
 def _tree(key=0):
@@ -66,8 +67,7 @@ def test_resilient_loop_gives_up(tmp_path):
 
 def test_elastic_shrink_single_device():
     """With 1 real device the shrink path still re-places state intact."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_elastic_mesh(1, 1)
     state = _tree()
     new_state, new_mesh = elastic_shrink(
         state, mesh,

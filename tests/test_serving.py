@@ -1,5 +1,6 @@
 """Serving engine: continuous batching correctness + VLA pipeline."""
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +10,9 @@ import pytest
 from repro.core.vla import vla_control_step
 from repro.models import model as M
 from repro.models.layers import ModelOptions
+from repro.models.stacks import cache_batch_axis
 from repro.serving import Request, ServingEngine
+from repro.serving.engine import _scatter_slot
 from repro.serving.sampler import greedy, sample
 from conftest import reduced_params
 
@@ -50,6 +53,115 @@ def test_engine_more_requests_than_slots(opts):
     done = eng.run()
     assert len(done) == 6
     assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def _streams(cfg, opts, params, reqs, *, fused, n_slots, max_seq, eos=-999,
+             tick_tokens=4):
+    """Run an engine over (prompt, max_tokens) pairs -> {uid: out_tokens}."""
+    eng = ServingEngine(cfg, opts, params, n_slots=n_slots, max_seq=max_seq,
+                        eos=eos, fused=fused, tick_tokens=tick_tokens)
+    for i, (prompt, max_tokens) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=prompt.copy(),
+                           max_tokens=max_tokens))
+    done = eng.run()
+    assert len(done) == len(reqs)
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+def test_fused_matches_reference_mixed_lengths(opts):
+    """Token-for-token fused == reference across mixed prompt lengths, mixed
+    budgets, and mid-stream admission (5 requests onto 2 slots, so slots
+    free and refill at different ticks)."""
+    cfg, params = reduced_params("qwen1.5-0.5b")
+    rng = np.random.default_rng(2)
+    reqs = [(rng.integers(0, cfg.vocab_size, l, dtype=np.int32), m)
+            for l, m in [(4, 7), (9, 3), (6, 12), (3, 5), (8, 9)]]
+    ref, _ = _streams(cfg, opts, params, reqs, fused=False, n_slots=2,
+                      max_seq=64)
+    fus, eng = _streams(cfg, opts, params, reqs, fused=True, n_slots=2,
+                        max_seq=64)
+    assert fus == ref
+    assert all(len(fus[i]) == m for i, (_, m) in enumerate(reqs))
+    assert eng.stats.decode_syncs < eng.stats.device_steps
+
+
+def test_fused_eos_and_budget_termination(opts):
+    """EOS mid-tick and budget exhaustion both terminate identically on the
+    fused and reference paths."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, cfg.vocab_size, 6, dtype=np.int32), 8)]
+    # budget termination first (eos that can never fire)
+    ref, _ = _streams(cfg, opts, params, reqs, fused=False, n_slots=1,
+                      max_seq=48)
+    fus, _ = _streams(cfg, opts, params, reqs, fused=True, n_slots=1,
+                      max_seq=48)
+    assert fus == ref and len(fus[0]) == 8
+    # now use a token the greedy stream actually emits mid-stream as EOS
+    eos = ref[0][3]
+    ref_e, _ = _streams(cfg, opts, params, reqs, fused=False, n_slots=1,
+                        max_seq=48, eos=eos)
+    fus_e, _ = _streams(cfg, opts, params, reqs, fused=True, n_slots=1,
+                        max_seq=48, eos=eos)
+    assert fus_e == ref_e
+    assert fus_e[0][-1] == eos and len(fus_e[0]) < 8
+    # prefill-emitted token counts against the budget / EOS too
+    for fused in (False, True):
+        one, _ = _streams(cfg, opts, params, [(reqs[0][0], 1)], fused=fused,
+                          n_slots=1, max_seq=48)
+        assert len(one[0]) == 1
+    first_eos, _ = _streams(cfg, opts, params, reqs, fused=True, n_slots=1,
+                            max_seq=48, eos=ref[0][0])
+    assert first_eos[0] == [ref[0][0]]
+
+
+def test_fused_host_sync_bound(opts):
+    """The host-sync contract: ceil(N/K) decode syncs for an N-token decode
+    on the fused path, N on the reference path."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(4)
+    N, K = 10, 4
+    reqs = [(rng.integers(0, cfg.vocab_size, 5, dtype=np.int32), N)]
+    _, ref = _streams(cfg, opts, params, reqs, fused=False, n_slots=1,
+                      max_seq=48, tick_tokens=K)
+    _, fus = _streams(cfg, opts, params, reqs, fused=True, n_slots=1,
+                      max_seq=48, tick_tokens=K)
+    # N tokens = 1 from prefill + N-1 from the decode path
+    assert ref.stats.decode_syncs == N - 1
+    assert fus.stats.decode_syncs == math.ceil((N - 1) / K)
+    assert fus.stats.tokens_decoded == ref.stats.tokens_decoded == N - 1
+
+
+def test_scatter_slot_single_slot(opts):
+    """n_slots == 1: slot and prefill caches have identical shapes, which
+    broke the old first-mismatched-axis inference (StopIteration)."""
+    cfg, params = reduced_params("qwen1.5-0.5b")
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(0, cfg.vocab_size, 6, dtype=np.int32), 5)]
+    fus, _ = _streams(cfg, opts, params, reqs, fused=True, n_slots=1,
+                      max_seq=48)
+    ref, _ = _streams(cfg, opts, params, reqs, fused=False, n_slots=1,
+                      max_seq=48)
+    assert fus == ref and len(fus[0]) == 5
+
+
+def test_scatter_slot_batch_axis_annotation(opts):
+    """_scatter_slot writes exactly the annotated batch slice of every cache
+    leaf (block caches: axis 1 behind the stacked layer dim; tail: axis 0)."""
+    cfg, _ = reduced_params("smollm-135m")
+    big = M.init_caches(cfg, 3, 16, jnp.float32, opts)
+    small = jax.tree.map(jnp.ones_like,
+                         M.init_caches(cfg, 1, 16, jnp.float32, opts))
+    out = _scatter_slot(big, small, 1)
+
+    def check(path, leaf):
+        ax = cache_batch_axis(path)
+        by_slot = jnp.moveaxis(leaf, ax, 0)
+        assert float(by_slot[1].min()) == 1.0, path
+        assert float(by_slot[0].max()) == 0.0, path
+        assert float(by_slot[2].max()) == 0.0, path
+
+    jax.tree_util.tree_map_with_path(check, out)
 
 
 def test_sampler_top_k(key):
