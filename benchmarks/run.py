@@ -11,7 +11,8 @@ import traceback
 
 from benchmarks import (claims_check, decode_microbench, engine_bench,
                         fig2_phase_latency, fig3_control_frequency,
-                        perf_compare, roofline_report, table1_hardware)
+                        kv_cache_bench, perf_compare, roofline_report,
+                        table1_hardware)
 
 MODULES = {
     "claims": claims_check,
@@ -22,6 +23,7 @@ MODULES = {
     "perf": perf_compare,
     "micro": decode_microbench,
     "engine": engine_bench,
+    "kv_cache": kv_cache_bench,
 }
 
 

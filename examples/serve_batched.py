@@ -22,21 +22,34 @@ def main(argv=None):
     p.add_argument("--reference", action="store_true",
                    help="per-token reference path (one host sync per token)")
     p.add_argument("--tick-tokens", type=int, default=8)
+    p.add_argument("--paged", action="store_true",
+                   help="paged KV cache with prefix sharing instead of "
+                        "dense per-slot buffers")
+    p.add_argument("--page-size", type=int, default=8,
+                   help="tokens per KV page (small default so the 12-token "
+                        "demo prompts span a full, shareable page)")
+    p.add_argument("--pallas", action="store_true",
+                   help="route decode through the flash-decode Pallas "
+                        "kernels (interpret mode on CPU: slow, real path)")
     args = p.parse_args(argv)
 
     cfg = get_config("qwen1.5-0.5b").reduced()
-    opts = ModelOptions(remat=False)
+    opts = ModelOptions(remat=False, use_pallas=args.pallas)
     params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
     eng = ServingEngine(cfg, opts, params, n_slots=4, max_seq=96, eos=-1,
                         fused=not args.reference,
-                        tick_tokens=args.tick_tokens)
+                        tick_tokens=args.tick_tokens,
+                        paged=args.paged, page_size=args.page_size)
 
     rng = np.random.default_rng(0)
+    shared_prompt = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
     for i in range(12):
-        eng.submit(Request(
-            uid=i, prompt=rng.integers(0, cfg.vocab_size, 12, dtype=np.int32),
-            max_tokens=int(rng.integers(6, 14))))
+        # every third request repeats the same observation -> prefix hits
+        prompt = (shared_prompt.copy() if args.paged and i % 3 == 0 else
+                  rng.integers(0, cfg.vocab_size, 12, dtype=np.int32))
+        eng.submit(Request(uid=i, prompt=prompt,
+                           max_tokens=int(rng.integers(6, 14))))
     done = eng.run()
 
     st = eng.stats
@@ -54,6 +67,10 @@ def main(argv=None):
     ph = st.phase_report()
     print(f"engine phases: vision {ph['vision']:.3f}s | "
           f"prefill {ph['prefill']:.3f}s | decode {ph['decode']:.3f}s")
+    if args.paged:
+        print(f"paged KV pool: pages_hwm {st.pages_hwm} | "
+              f"cache_bytes_hwm {st.cache_bytes_hwm} | "
+              f"prefix_hits {st.prefix_hits}")
     print("per-request phases (queue+prefill | decode):")
     for r in sorted(done, key=lambda r: r.uid)[:6]:
         print(f"  req {r.uid:2d}: {r.t_prefill - r.t_submit:6.3f}s | "

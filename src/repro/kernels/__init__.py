@@ -2,7 +2,8 @@
 interpret mode against a pure-jnp oracle (ref.py):
 
 - flash_attention: prefill/training attention (causal + sliding window, GQA)
-- decode_attention: flash-decode over the KV cache (the paper's bottleneck)
+- decode_attention: flash-decode over the KV cache (the paper's bottleneck),
+  dense per-slot layout + paged variant (page-table gather, serving engine)
 - ssd: Mamba2 chunked state-space-duality scan
 - moe_gmm: grouped expert MLP (capacity-based MoE hot loop)
 """

@@ -1,4 +1,5 @@
 from repro.kernels.decode_attention import ops, ref
-from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                paged_decode_attention)
 
-__all__ = ["decode_attention", "ops", "ref"]
+__all__ = ["decode_attention", "paged_decode_attention", "ops", "ref"]

@@ -8,9 +8,17 @@ GQA arithmetic-intensity win). Online softmax state lives in VMEM scratch
 across the sequential KV-block grid dimension.
 
 The valid length (current decode position) arrives as a scalar-prefetch
-operand so fully-invalid KV blocks are skipped before their DMA is issued —
-the same early-exit a paged decode kernel does on GPU, re-expressed for the
-TPU's sequential grid.
+operand, so fully-invalid KV blocks are skipped twice over: the BlockSpec
+index map remaps them to block 0 (repeated index-map outputs elide the
+HBM->VMEM DMA) and ``pl.when`` skips their compute — the same early-exit a
+paged decode kernel does on GPU, re-expressed for the TPU's sequential grid.
+``index`` may be a scalar or a per-slot ``[B]`` vector (continuous
+batching): each batch row masks and early-exits against its own position.
+
+``_flash_decode_body`` is the single online-softmax body shared with the
+paged variant (``paged.py``) — the two kernels differ only in how the KV
+block for a grid cell is located (contiguous rows vs page-table gather), so
+the numerically-sensitive part lives in exactly one place.
 """
 from __future__ import annotations
 
@@ -27,11 +35,23 @@ from repro.configs.base import GLOBAL_WINDOW
 NEG_INF = -1e30
 
 
-def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            bk: int, nk: int, window: int):
-    ik = pl.program_id(2)
-    index = idx_ref[0]
+def _block_live(index, k_start: int, bk: int, window: int):
+    """Whether KV block [k_start, k_start+bk) has any unmasked position for
+    a query at ``index`` (shared by kernel bodies and BlockSpec index maps)."""
+    live = k_start <= index
+    if window != GLOBAL_WINDOW:
+        live = jnp.logical_and(live, (index - (k_start + bk - 1)) < window)
+    return live
 
+
+def _flash_decode_body(index, ik, q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, bk: int, nk: int,
+                       window: int):
+    """One KV block of the online-softmax flash-decode update. ``index`` is
+    this row's current position; ``ik`` the block's position in the logical
+    sequence (block covers positions [ik*bk, (ik+1)*bk)). Positions past
+    ``index`` (including any out-of-bounds tail lanes of a non-aligned
+    cache) are masked before they can contribute."""
     @pl.when(ik == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
@@ -39,11 +59,8 @@ def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     k_start = ik * bk
-    run = k_start <= index
-    if window != GLOBAL_WINDOW:
-        run = jnp.logical_and(run, (index - (k_start + bk - 1)) < window)
 
-    @pl.when(run)
+    @pl.when(_block_live(index, k_start, bk, window))
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)      # [G, h]
         k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bk, h]
@@ -56,6 +73,10 @@ def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         if window != GLOBAL_WINDOW:
             mask &= (index - kpos) < window
         s = jnp.where(mask, s, NEG_INF)
+        # invalid lanes have p == 0 exactly, but v there may be garbage —
+        # out-of-bounds tail lanes are NaN-padded in interpret mode and
+        # undefined on TPU, and 0 * NaN would poison the accumulator
+        v = jnp.where(mask[0, :, None], v, 0.0)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1))
         p = jnp.exp(s - m_new[:, None]) * mask
@@ -71,20 +92,40 @@ def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bk: int, nk: int, window: int):
+    _flash_decode_body(idx_ref[pl.program_id(0)], pl.program_id(2),
+                       q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                       bk=bk, nk=nk, window=window)
+
+
 def decode_attention_kernel(q, k_cache, v_cache, index, *,
                             window: int = GLOBAL_WINDOW, bk: int = 512,
                             interpret: bool = False):
-    """q [B,N,h]; k/v cache [B,S,K,h]; index: int32 scalar (current position).
-    Returns [B,N,h]."""
+    """q [B,N,h]; k/v cache [B,S,K,h]; index: int32 scalar or per-slot [B]
+    vector of current positions (each must be < S). Returns [B,N,h].
+
+    S need not divide by ``bk``: the grid covers ceil(S/bk) blocks and the
+    tail block's out-of-bounds lanes carry positions > index, so the
+    ``kpos <= index`` mask silently discards them — no KV positions are
+    dropped and no padded copy of the cache is materialized.
+    """
     B, N, h = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
     G = N // K
     bk = min(bk, S)
-    nk = S // bk
+    nk = pl.cdiv(S, bk)
     grid = (B, K, nk)
     # view q as [B, G, K, h] so one grid cell covers a whole KV group
     qg = q.reshape(B, K, G, h).swapaxes(1, 2)
-    idx = jnp.asarray(index, jnp.int32).reshape(1)
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+
+    def kv_map(b, kh, ik, idx_ref):
+        # remap fully-invalid blocks (past the position, or entirely older
+        # than the window) to block 0 so their DMA is elided (repeated
+        # index-map outputs are not re-fetched); compute is pl.when-skipped.
+        live = _block_live(idx_ref[b], ik * bk, bk, window)
+        return b, jnp.where(live, ik, 0), kh, 0
 
     kernel = functools.partial(_kernel, bk=bk, nk=nk, window=window)
     out = pl.pallas_call(
@@ -94,8 +135,8 @@ def decode_attention_kernel(q, k_cache, v_cache, index, *,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, G, 1, h), lambda b, kh, ik, idx_ref: (b, 0, kh, 0)),
-                pl.BlockSpec((1, bk, 1, h), lambda b, kh, ik, idx_ref: (b, ik, kh, 0)),
-                pl.BlockSpec((1, bk, 1, h), lambda b, kh, ik, idx_ref: (b, ik, kh, 0)),
+                pl.BlockSpec((1, bk, 1, h), kv_map),
+                pl.BlockSpec((1, bk, 1, h), kv_map),
             ],
             out_specs=pl.BlockSpec((1, G, 1, h),
                                    lambda b, kh, ik, idx_ref: (b, 0, kh, 0)),

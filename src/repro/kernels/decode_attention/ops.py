@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the decode attention kernel."""
+"""jit'd public wrappers for the decode attention kernels (dense + paged)."""
 from __future__ import annotations
 
 import functools
@@ -8,13 +8,30 @@ import jax
 from repro.configs.base import GLOBAL_WINDOW
 from repro.kernels.decode_attention.decode_attention import (
     decode_attention_kernel)
+from repro.kernels.decode_attention.paged import (
+    paged_decode_attention_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
 def decode_attention(q, k_cache, v_cache, index, *,
                      window: int = GLOBAL_WINDOW, bk: int = 512,
                      interpret: bool = False):
-    """Single-token flash-decode. q [B,N,h]; caches [B,S,K,h]; index scalar
-    int32 position of the token being decoded. S must divide by bk."""
+    """Single-token flash-decode. q [B,N,h]; caches [B,S,K,h]; index int32
+    position of the token being decoded — scalar or per-slot [B] vector
+    (continuous batching). S that does not divide by bk is handled by a
+    ceil-divided grid whose out-of-bounds tail lanes are masked in-kernel
+    (no padded copy of the cache is materialized)."""
     return decode_attention_kernel(q, k_cache, v_cache, index, window=window,
                                    bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_table, index, *,
+                           window: int = GLOBAL_WINDOW,
+                           interpret: bool = False):
+    """Single-token flash-decode against a paged KV pool. q [B,N,h]; pages
+    [num_pages, page_size, K, h]; page_table [B, npg] int32; index scalar or
+    per-slot [B] vector of current positions."""
+    return paged_decode_attention_kernel(q, k_pages, v_pages, page_table,
+                                         index, window=window,
+                                         interpret=interpret)

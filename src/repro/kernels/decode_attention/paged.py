@@ -1,0 +1,89 @@
+"""Paged flash-decode Pallas TPU kernel.
+
+Same bandwidth-tuned single-token GQA attention as ``decode_attention`` —
+the online-softmax body is literally shared (``_flash_decode_body``) — but
+the KV cache lives in a shared page pool ``[num_pages, page_size, K, h]``
+instead of a dense per-slot ``[B, S, K, h]`` buffer. Each slot's logical
+sequence is described by a row of the page table: logical positions
+``[p*page_size, (p+1)*page_size)`` live in physical page ``page_table[b, p]``.
+
+The page table and the per-slot positions arrive as scalar-prefetch
+operands, so the *index map itself* gathers KV blocks through the page
+table: grid cell ``(b, kv_head, p)`` DMAs physical page ``page_table[b, p]``
+from HBM. Fully-masked pages (past a slot's position, or entirely older
+than its sliding window) are remapped to the null page so their DMA is
+never issued, and their compute is skipped by ``pl.when`` — vLLM's paged
+attention early-exit, re-expressed for the TPU's sequential grid.
+
+Page 0 is the pool's reserved null page: padding entries in the table point
+at it and its contribution is always masked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.configs.base import GLOBAL_WINDOW
+from repro.kernels.decode_attention.decode_attention import (_block_live,
+                                                             _flash_decode_body)
+
+
+def _paged_kernel(pt_ref, idx_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, ps: int, npg: int, window: int):
+    _flash_decode_body(idx_ref[pl.program_id(0)], pl.program_id(2),
+                       q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                       bk=ps, nk=npg, window=window)
+
+
+def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, index, *,
+                                  window: int = GLOBAL_WINDOW,
+                                  interpret: bool = False):
+    """q [B,N,h]; k/v pages [num_pages, page_size, K, h]; page_table
+    [B, npg] int32 physical page ids; index int32 scalar or per-slot [B]
+    vector of current positions (< npg * page_size). Returns [B,N,h]."""
+    B, N, h = q.shape
+    ps, K = k_pages.shape[1], k_pages.shape[2]
+    npg = page_table.shape[1]
+    G = N // K
+    grid = (B, K, npg)
+    qg = q.reshape(B, K, G, h).swapaxes(1, 2)
+    pt = jnp.asarray(page_table, jnp.int32)
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+
+    def kv_map(b, kh, ip, pt_ref, idx_ref):
+        # KV blocks are gathered *through the page table*: grid cell
+        # (b, kh, ip) streams physical page pt[b, ip]. Fully-masked pages
+        # are remapped to the null page 0, so their distinct-page DMA is
+        # never issued (repeated index-map outputs elide the fetch).
+        live = _block_live(idx_ref[b], ip * ps, ps, window)
+        return jnp.where(live, pt_ref[b, ip], 0), 0, kh, 0
+
+    kernel = functools.partial(_paged_kernel, ps=ps, npg=npg, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, G, 1, h),
+                             lambda b, kh, ip, pt_ref, idx_ref: (b, 0, kh, 0)),
+                pl.BlockSpec((1, ps, 1, h), kv_map),
+                pl.BlockSpec((1, ps, 1, h), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, G, 1, h),
+                                   lambda b, kh, ip, pt_ref, idx_ref:
+                                   (b, 0, kh, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G, h), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, G, K, h), q.dtype),
+        interpret=interpret,
+    )(pt, idx, qg, k_pages, v_pages)
+    return out.swapaxes(1, 2).reshape(B, N, h)

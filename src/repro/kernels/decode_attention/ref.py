@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the decode attention kernel."""
+"""Pure-jnp oracles for the decode attention kernels (dense and paged)."""
 from __future__ import annotations
 
 import jax
@@ -10,17 +10,39 @@ from repro.configs.base import GLOBAL_WINDOW
 
 def decode_attention_ref(q, k_cache, v_cache, index,
                          window: int = GLOBAL_WINDOW):
-    """q [B,N,h]; caches [B,S,K,h]; index scalar. Returns [B,N,h]."""
+    """q [B,N,h]; caches [B,S,K,h]; index scalar or per-slot [B] vector.
+    Returns [B,N,h]."""
     B, N, h = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
     G = N // K
     qg = (q * (1.0 / np.sqrt(h))).reshape(B, K, G, h)
     s = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache).astype(jnp.float32)
     kpos = jnp.arange(S)
-    valid = kpos <= index
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+    valid = kpos[None] <= idx[:, None]                      # [B, S]
     if window != GLOBAL_WINDOW:
-        valid &= (index - kpos) < window
-    s = jnp.where(valid[None, None, None], s, -1e30)
+        valid &= (idx[:, None] - kpos[None]) < window
+    s = jnp.where(valid[:, None, None], s, -1e30)
     w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgt,btkh->bkgh", w, v_cache)
     return out.reshape(B, N, h)
+
+
+def gather_pages(pages, page_table):
+    """Materialize the dense per-slot view of a paged cache.
+    pages [num_pages, page_size, K, h]; page_table [B, npg] ->
+    [B, npg*page_size, K, h] (logical position p*page_size + o at row p,
+    offset o)."""
+    B, npg = page_table.shape
+    g = pages[page_table]                        # [B, npg, ps, K, h]
+    return g.reshape(B, npg * pages.shape[1], *pages.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, index,
+                               window: int = GLOBAL_WINDOW):
+    """Oracle for the paged kernel: gather pages into the dense layout, then
+    run the dense oracle. q [B,N,h]; pages [num_pages, page_size, K, h];
+    page_table [B, npg]; index scalar or [B]."""
+    return decode_attention_ref(q, gather_pages(k_pages, page_table),
+                                gather_pages(v_pages, page_table),
+                                index, window=window)

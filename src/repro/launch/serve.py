@@ -34,18 +34,33 @@ def main(argv=None):
     p.add_argument("--reference", action="store_true",
                    help="per-token decode path instead of the fused tick")
     p.add_argument("--tick-tokens", type=int, default=8)
+    p.add_argument("--paged", action="store_true",
+                   help="paged KV cache (shared page pool + per-slot page "
+                        "tables, prefix caching) instead of dense per-slot "
+                        "buffers")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="tokens per KV page (paged mode)")
+    p.add_argument("--num-pages", type=int, default=0,
+                   help="pool capacity in pages (0 = worst-case sizing)")
+    p.add_argument("--pallas", action="store_true",
+                   help="route decode through the flash-decode Pallas "
+                        "kernels (dense or paged per --paged); on CPU they "
+                        "run in interpret mode, which is slow but exercises "
+                        "the real kernel path")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    opts = ModelOptions(remat=False)
+    opts = ModelOptions(remat=False, use_pallas=args.pallas)
     params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
     eng = ServingEngine(cfg, opts, params, n_slots=args.slots,
                         max_seq=args.max_seq, eos=-1,
                         fused=not args.reference,
-                        tick_tokens=args.tick_tokens)
+                        tick_tokens=args.tick_tokens,
+                        paged=args.paged, page_size=args.page_size,
+                        num_pages=args.num_pages or None)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -63,6 +78,11 @@ def main(argv=None):
     print(f"[serve] {st.decode_syncs} decode host syncs / "
           f"{st.device_steps} device steps "
           f"({'fused' if not args.reference else 'reference'} path)")
+    if args.paged:
+        print(f"[serve] paged KV: page_size={args.page_size} "
+              f"pages_hwm={st.pages_hwm} "
+              f"cache_bytes_hwm={st.cache_bytes_hwm} "
+              f"prefix_hits={st.prefix_hits}")
     for r in done[:4]:
         print(f"  req {r.uid}: queue {r.t_prefill - r.t_submit:.3f}s "
               f"decode {r.t_done - r.t_prefill:.3f}s "

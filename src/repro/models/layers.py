@@ -269,10 +269,19 @@ def attention_banded(q, k, v, q_pos, k_pos, window: int, chunk: int):
     return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, N, h)
 
 
-def attention_decode(q, k_cache, v_cache, index, window: int):
+def attention_decode(q, k_cache, v_cache, index, window: int,
+                     opts: Optional[ModelOptions] = None):
     """Single-token decode against a cache. q [B,1,N,h]; cache [B,Smax,K,h];
     index = current position — scalar int32 or per-slot [B] vector
-    (continuous batching)."""
+    (continuous batching). With ``opts.use_pallas`` the bandwidth-tuned
+    flash-decode kernel handles both index forms; the einsum path below is
+    the oracle."""
+    if opts is not None and opts.use_pallas:
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention(q[:, 0], k_cache, v_cache, index,
+                                      window=window,
+                                      interpret=opts.pallas_interpret)
+        return out[:, None]
     B, _, N, h = q.shape
     Smax, K = k_cache.shape[1], k_cache.shape[2]
     G = N // K
@@ -323,13 +332,53 @@ def update_cache(cache, new, index):
             c, n.astype(c.dtype), i, 0))(cache, new, idx)
 
 
+def update_cache_paged(pages, new, page_table, index):
+    """Write the decode token's KV into the page pool.
+
+    pages [num_pages, page_size, K, h]; new [B,1,K,h]; page_table [B,npg]
+    int32; index scalar or per-slot [B] vector. Logical position ``i`` of
+    slot ``b`` lives at (page_table[b, i // page_size], i % page_size).
+    Distinct live slots always own distinct write pages, so the scatter has
+    no cross-slot collisions (retired slots' table rows point at the
+    reserved null page 0, a write sink that is never read unmasked)."""
+    ps = pages.shape[1]
+    B = new.shape[0]
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+    pid = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
+    return pages.at[pid, idx % ps].set(new[:, 0].astype(pages.dtype))
+
+
+def attention_decode_paged(q, k_pages, v_pages, page_table, index,
+                           window: int, opts: Optional[ModelOptions] = None):
+    """Single-token decode against a paged KV pool. q [B,1,N,h]; pages
+    [num_pages, page_size, K, h]; page_table [B,npg]; index scalar or [B].
+
+    With ``opts.use_pallas`` the per-slot paged flash-decode kernel gathers
+    KV blocks through the page table inside the kernel (scalar-prefetched
+    index map). The fallback materializes the dense gather and reuses
+    ``attention_decode`` — bit-identical to the dense layout, which is what
+    the paged-vs-dense equivalence gates rely on."""
+    if opts is not None and opts.use_pallas:
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.paged_decode_attention(q[:, 0], k_pages, v_pages,
+                                            page_table, index, window=window,
+                                            interpret=opts.pallas_interpret)
+        return out[:, None]
+    from repro.kernels.decode_attention.ref import gather_pages
+    return attention_decode(q, gather_pages(k_pages, page_table),
+                            gather_pages(v_pages, page_table), index, window)
+
+
 def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
               positions, cache=None, cache_index=None, ctx=None,
-              ctx_prefix: str = "", causal: bool = True):
+              ctx_prefix: str = "", causal: bool = True, page_table=None):
     """Full attention sub-layer (projections + core + output proj).
 
     Decode mode when ``cache`` is a (k,v) tuple and x has S==1.
     Cross-attention when ``ctx`` (encoder output) is given: K/V from ctx.
+    With ``page_table`` [B,npg] the cache tuple is interpreted as paged
+    pools [num_pages, page_size, K, h] (decode only; prefill stays dense —
+    the serving engine scatters prefill KV into pages).
     Returns (out, new_cache).
     """
     pre = ctx_prefix
@@ -354,22 +403,37 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
 
     new_cache = cache
     if cache is not None and not pre:
-        smax = cache[0].shape[1]
-        ring = (window != GLOBAL_WINDOW and smax == window)
-        write_index = cache_index % smax if ring else cache_index
-        if not ring and S > smax:
-            raise ValueError(f"prefill length {S} exceeds cache {smax}")
-        k_cache = update_cache(cache[0], k, write_index)
-        v_cache = update_cache(cache[1], v, write_index)
-        new_cache = (k_cache, v_cache)
-        if S == 1:
-            if ring:
-                out = attention_decode_ring(q, k_cache, v_cache, cache_index)
-            else:
-                out = attention_decode(q, k_cache, v_cache, cache_index,
-                                       window)
-        else:  # prefill: attend within the fresh chunk (assumes cache_index==0)
-            out = _core(q, k, v, positions, positions, window, opts, causal)
+        if page_table is not None:
+            # paged layout: cache leaves are shared pools, positions resolve
+            # through the per-slot page table (decode only)
+            if S != 1:
+                raise ValueError("paged caches support single-token decode; "
+                                 "prefill runs dense and is scattered into "
+                                 "pages by the serving engine")
+            k_cache = update_cache_paged(cache[0], k, page_table, cache_index)
+            v_cache = update_cache_paged(cache[1], v, page_table, cache_index)
+            new_cache = (k_cache, v_cache)
+            out = attention_decode_paged(q, k_cache, v_cache, page_table,
+                                         cache_index, window, opts)
+        else:
+            smax = cache[0].shape[1]
+            ring = (window != GLOBAL_WINDOW and smax == window)
+            write_index = cache_index % smax if ring else cache_index
+            if not ring and S > smax:
+                raise ValueError(f"prefill length {S} exceeds cache {smax}")
+            k_cache = update_cache(cache[0], k, write_index)
+            v_cache = update_cache(cache[1], v, write_index)
+            new_cache = (k_cache, v_cache)
+            if S == 1:
+                if ring:
+                    out = attention_decode_ring(q, k_cache, v_cache,
+                                                cache_index)
+                else:
+                    out = attention_decode(q, k_cache, v_cache, cache_index,
+                                           window, opts)
+            else:  # prefill: attend within the fresh chunk (cache_index==0)
+                out = _core(q, k, v, positions, positions, window, opts,
+                            causal)
     elif pre and ctx is not None:
         kpos = jnp.arange(k.shape[1])
         out = _core(q, k, v, positions, kpos, GLOBAL_WINDOW, opts, causal=False)

@@ -136,9 +136,12 @@ def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
 
 
 def decode_step(cfg: ModelConfig, opts: ModelOptions, params, token,
-                caches, index):
+                caches, index, page_table=None):
     """One autoregressive step. token [B,1] int32; index: scalar position or
-    per-slot [B] vector (continuous batching).
+    per-slot [B] vector (continuous batching). ``page_table`` [B,npg]
+    selects the paged cache layout: attention cache leaves are shared
+    ``[num_pages, page_size, K, h]`` pools and positions resolve through the
+    table (see serving.kv_pool); dense per-slot caches when None.
     Returns (logits [B,1,V], new caches)."""
     B = token.shape[0]
     idx = jnp.asarray(index, jnp.int32)
@@ -148,24 +151,28 @@ def decode_step(cfg: ModelConfig, opts: ModelOptions, params, token,
     x = constrain(x, "batch", "act_seq", "act_embed")
     x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
                                      positions, caches=caches,
-                                     cache_index=index)
+                                     cache_index=index,
+                                     page_table=page_table)
     return _logits(params, x, cfg), caches
 
 
 def decode_loop(cfg: ModelConfig, opts: ModelOptions, params, token, caches,
-                index, n_steps: int, sample_fn=None):
+                index, n_steps: int, sample_fn=None, page_table=None):
     """``n_steps`` autoregressive decode steps fused on-device via lax.scan —
     one XLA dispatch instead of ``n_steps`` host round-trips.
 
     index: scalar start position or per-slot [B] vector (continuous
     batching); advanced by 1 every step. ``sample_fn`` maps logits [B,1,V]
-    -> tokens [B] (greedy when None).
+    -> tokens [B] (greedy when None). ``page_table`` as in ``decode_step``
+    (the table is constant across the fused steps; callers pre-allocate
+    pages covering index + n_steps).
     Returns (tokens [B, n_steps], last_token [B,1], caches)."""
     idx = jnp.asarray(index, jnp.int32)
 
     def step(carry, _):
         tok, caches, idx = carry
-        logits, caches = decode_step(cfg, opts, params, tok, caches, idx)
+        logits, caches = decode_step(cfg, opts, params, tok, caches, idx,
+                                     page_table=page_table)
         nxt = (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
                if sample_fn is None else sample_fn(logits))[:, None]
         return (nxt, caches, idx + 1), nxt[:, 0]

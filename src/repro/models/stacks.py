@@ -193,7 +193,8 @@ def tower_template(enc: VisionConfig, d_out: int) -> Dict:
 # ---------------------------------------------------------------------------
 
 def apply_sublayer(p, x, cfg: ModelConfig, opts: L.ModelOptions, kind: SubKind,
-                   positions, cache=None, cache_index=None, ctx=None):
+                   positions, cache=None, cache_index=None, ctx=None,
+                   page_table=None):
     """One transformer sub-layer. Returns (x, new_cache_dict)."""
     new_cache: Dict = {}
     h = L.apply_norm(p, x, cfg, "ln1")
@@ -202,7 +203,8 @@ def apply_sublayer(p, x, cfg: ModelConfig, opts: L.ModelOptions, kind: SubKind,
         if cache is not None and "k" in cache:
             attn_cache = (cache["k"], cache["v"])
         a, attn_cache = L.attention(p, h, cfg, opts, kind.window, positions,
-                                    cache=attn_cache, cache_index=cache_index)
+                                    cache=attn_cache, cache_index=cache_index,
+                                    page_table=page_table)
         if attn_cache is not None:
             new_cache["k"], new_cache["v"] = attn_cache
         x = x + a
@@ -250,8 +252,12 @@ def apply_sublayer(p, x, cfg: ModelConfig, opts: L.ModelOptions, kind: SubKind,
 
 def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
                   positions, caches=None, cache_index=None, ctx=None,
-                  train: bool = False):
-    """Run the full decoder stack. Returns (x, new_caches)."""
+                  train: bool = False, page_table=None):
+    """Run the full decoder stack. Returns (x, new_caches).
+
+    ``page_table`` [B, npg] switches attention cache leaves to the paged
+    layout (shared per-layer pools + per-slot tables); it is a single table
+    shared by every layer, captured as a constant by the layer scan."""
     period, nblocks, ntail = stack_plan(cfg)
     kinds = sub_kinds(cfg)
 
@@ -262,7 +268,7 @@ def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
             sub_fn = functools.partial(
                 apply_sublayer, cfg=cfg, opts=opts, kind=kinds[j],
                 positions=positions, cache=sub_c, cache_index=cache_index,
-                ctx=ctx)
+                ctx=ctx, page_table=page_table)
             if train and opts.remat and opts.remat_sublayers and period > 1:
                 sub_fn = jax.checkpoint(
                     sub_fn, policy=jax.checkpoint_policies.nothing_saveable)
@@ -301,7 +307,8 @@ def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
             tc = caches["tail"].get(f"tail{j}") if caches else None
             x, nc = apply_sublayer(params["tail"][f"tail{j}"], x, cfg, opts,
                                    kinds[j], positions, cache=tc,
-                                   cache_index=cache_index, ctx=ctx)
+                                   cache_index=cache_index, ctx=ctx,
+                                   page_table=page_table)
             if nc:
                 tail_new[f"tail{j}"] = nc
         if new_caches is not None:
@@ -339,15 +346,45 @@ def apply_tower(params, embeds, enc: VisionConfig, opts: L.ModelOptions):
 # ---------------------------------------------------------------------------
 
 def cache_template(cfg: ModelConfig, batch: int, max_seq: int,
-                   dtype=jnp.bfloat16, opts: Optional[L.ModelOptions] = None):
-    """Shape tree (PSpec) for the decode cache; concrete zeros via init_caches."""
+                   dtype=jnp.bfloat16, opts: Optional[L.ModelOptions] = None,
+                   *, paged: bool = False, num_pages: int = 0,
+                   page_size: int = 0):
+    """Shape tree (PSpec) for the decode cache; concrete zeros via init_caches.
+
+    Dense (default): attention K/V leaves are per-slot ``[batch, seq, K, h]``
+    buffers over-allocated at ``max_seq``. Paged: attention K/V leaves become
+    shared pools ``[num_pages, page_size, K, h]`` addressed through a
+    per-slot page table (see serving.kv_pool); only attention k/v move to
+    the pool — SSM/conv state and cross-attention K/V keep the slot-batched
+    layout (they are O(1) or prompt-sized per slot, not decode-growing)."""
     period, nblocks, ntail = stack_plan(cfg)
     kinds = sub_kinds(cfg)
     opts = opts or L.ModelOptions()
+    if paged:
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("paged cache_template needs num_pages/page_size")
+        if opts.window_cache:
+            raise ValueError("window_cache (per-layer ring buffers) and the "
+                             "paged KV pool are mutually exclusive")
 
     def sub_cache(kind: SubKind):
         c: Dict[str, PSpec] = {}
         if kind.mixer == "attn":
+            if paged:
+                c["k"] = PSpec((num_pages, page_size, cfg.num_kv_heads,
+                                cfg.head_dim),
+                               (None, None, "act_kv_heads", None))
+                c["v"] = PSpec((num_pages, page_size, cfg.num_kv_heads,
+                                cfg.head_dim),
+                               (None, None, "act_kv_heads", None))
+                if kind.cross and cfg.encoder:
+                    c["xk"] = PSpec((batch, cfg.encoder.num_tokens,
+                                     cfg.num_kv_heads, cfg.head_dim),
+                                    ("batch", None, "act_kv_heads", None))
+                    c["xv"] = PSpec((batch, cfg.encoder.num_tokens,
+                                     cfg.num_kv_heads, cfg.head_dim),
+                                    ("batch", None, "act_kv_heads", None))
+                return c
             seq = max_seq
             if opts.window_cache and kind.window != GLOBAL_WINDOW:
                 seq = min(max_seq, kind.window)
@@ -394,8 +431,18 @@ def cache_dtype(path_key: str, dtype):
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
-                dtype=jnp.bfloat16, opts=None):
-    t = cache_template(cfg, batch, max_seq, dtype, opts)
+                dtype=jnp.bfloat16, opts=None, *, paged: bool = False,
+                num_pages: int = 0, page_size: int = 0):
+    t = cache_template(cfg, batch, max_seq, dtype, opts, paged=paged,
+                       num_pages=num_pages, page_size=page_size)
     return jax.tree_util.tree_map_with_path(
         lambda path, s: jnp.zeros(s.shape, cache_dtype(path[-1].key, dtype)),
         t, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def is_paged_leaf(path) -> bool:
+    """Whether a cache-pytree leaf lives in the paged KV pool (attention
+    ``k``/``v``) rather than the slot-batched layout (``xk``/``xv``/``ssm``/
+    ``conv``). Only meaningful for caches built with ``paged=True``."""
+    key = getattr(path[-1], "key", path[-1])
+    return key in ("k", "v")

@@ -1,5 +1,6 @@
 from repro.serving.engine import EngineStats, Request, ServingEngine
+from repro.serving.kv_pool import KVPool, PoolExhausted
 from repro.serving.sampler import greedy, sample, sample_token
 
-__all__ = ["EngineStats", "Request", "ServingEngine", "greedy", "sample",
-           "sample_token"]
+__all__ = ["EngineStats", "KVPool", "PoolExhausted", "Request",
+           "ServingEngine", "greedy", "sample", "sample_token"]

@@ -19,6 +19,20 @@ Two decode paths:
 - **reference**: the original one-token-per-tick path (``step()``), kept for
   equivalence testing and as the bit-exactness oracle under greedy sampling.
 
+Two cache layouts (``paged=``):
+
+- **dense** (default, and the equivalence oracle): per-slot
+  ``[n_slots, max_seq, K, h]`` buffers, over-allocated at ``max_seq``;
+  admission scatters the batch-1 prefill cache into the slot's batch row.
+- **paged**: attention K/V lives in shared ``[num_pages, page_size, K, h]``
+  pools addressed through a per-slot page table (``serving.kv_pool``).
+  Admission allocates pages (sharing full prompt-prefix pages with the
+  pool's prefix cache — repeated robot observations are not re-stored) and
+  scatters prefill KV page-wise; finish frees pages back to the pool. Cache
+  memory scales with pages actually used, not ``max_seq`` per slot, and
+  ``EngineStats`` tracks pages-in-use / cache-bytes high-water / prefix
+  hits.
+
 Phase latency accounting (vision / prefill / decode) is recorded per request
 and aggregated in ``EngineStats`` — the serving-side counterpart of the
 paper's Nsight phase decomposition — and survives the fusion: vision runs as
@@ -28,7 +42,9 @@ decode wall-time is attributed per tick.
 from __future__ import annotations
 
 import functools
+import hashlib
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -39,8 +55,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.layers import ModelOptions
-from repro.models.stacks import cache_batch_axis
+from repro.models.stacks import cache_batch_axis, is_paged_leaf
 from repro.serving import sampler as S
+from repro.serving.kv_pool import KVPool, PoolExhausted
 
 
 @dataclass
@@ -54,15 +71,23 @@ class Request:
     t_submit: float = 0.0
     t_prefill: float = 0.0
     t_done: float = 0.0
+    pages_used: int = 0                # paged engine: pages held at finish
+    pages_shared: int = 0              # paged engine: prefix-cache hits
 
 
 @dataclass
 class EngineStats:
-    """Host-sync contract + phase accounting for one engine lifetime.
+    """Host-sync contract + phase + cache accounting for one engine lifetime.
 
     A "sync" is a device->host readback that blocks the Python loop (the
     per-token ``np.asarray``/``int()`` the paper's launch-overhead term maps
     to). The fused path pays one per tick; the reference path one per token.
+
+    The cache fields are live only on the paged engine: ``pages_in_use`` /
+    ``pages_hwm`` count pool pages referenced by live slots,
+    ``cache_bytes_hwm`` is the high-water of their device bytes (summed over
+    every attention layer's K+V pools), and ``prefix_hits`` counts pages
+    served from the prefix cache instead of being re-stored.
     """
     decode_syncs: int = 0       # blocking readbacks on the decode path
     prefill_syncs: int = 0      # blocking readbacks at admission
@@ -72,6 +97,10 @@ class EngineStats:
     vision_time: float = 0.0
     prefill_time: float = 0.0
     decode_time: float = 0.0
+    pages_in_use: int = 0       # paged: current pool pages held by live slots
+    pages_hwm: int = 0          # paged: high-water pages in use
+    cache_bytes_hwm: int = 0    # paged: high-water KV bytes actually held
+    prefix_hits: int = 0        # paged: pages reused via the prefix cache
 
     def phase_report(self) -> Dict[str, float]:
         """Figure-2-style wall-time decomposition."""
@@ -81,13 +110,15 @@ class EngineStats:
 
 def _fused_tick(cfg: ModelConfig, opts: ModelOptions, K: int, eos: int,
                 temperature: float, top_k: int, stop_on_finish: bool,
-                params, tokens, caches, index, budget, done, key):
+                params, tokens, caches, index, budget, done, key,
+                page_table=None):
     """Up to K decode steps on device. Per-slot carry: current token [B,1],
     cache position index [B], remaining budget [B], done [B]. Emitted tokens
     land in out [B,K] (each live slot fills a prefix of its row, length
     n_emit[s]). Exits early when every slot is done or — with
     ``stop_on_finish`` — as soon as any slot newly finishes, so the host can
-    refill it."""
+    refill it. ``page_table`` [B,npg] selects the paged cache layout (pages
+    for index..index+K-1 are pre-allocated by the host)."""
     B = tokens.shape[0]
     out0 = jnp.full((B, K), -1, jnp.int32)
     n_emit0 = jnp.zeros((B,), jnp.int32)
@@ -103,7 +134,7 @@ def _fused_tick(cfg: ModelConfig, opts: ModelOptions, K: int, eos: int,
     def body(c):
         step, tokens, caches, index, budget, done, key, out, n_emit = c
         logits, caches = M.decode_step(cfg, opts, params, tokens, caches,
-                                       index)
+                                       index, page_table=page_table)
         key, sub = jax.random.split(key)
         nxt = S.sample_token(logits, sub, temperature, top_k)   # [B]
         live = ~done
@@ -129,7 +160,8 @@ def _fused_tick(cfg: ModelConfig, opts: ModelOptions, K: int, eos: int,
 # one engine per model replica — shares compiled code instead of re-tracing.
 @functools.lru_cache(maxsize=None)
 def _jit_decode(cfg: ModelConfig, opts: ModelOptions):
-    return jax.jit(lambda p, t, c, i: M.decode_step(cfg, opts, p, t, c, i))
+    return jax.jit(lambda p, t, c, i, pt=None: M.decode_step(
+        cfg, opts, p, t, c, i, page_table=pt))
 
 
 @functools.lru_cache(maxsize=None)
@@ -157,7 +189,9 @@ class ServingEngine:
                  n_slots: int = 4, max_seq: int = 512, eos: int = 1,
                  prompt_len: int = 64, fused: bool = True,
                  tick_tokens: int = 8, temperature: float = 0.0,
-                 top_k: int = 0, seed: int = 0, stop_on_finish: bool = True):
+                 top_k: int = 0, seed: int = 0, stop_on_finish: bool = True,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None, prefix_cache: bool = True):
         if tick_tokens < 1:
             raise ValueError(f"tick_tokens must be >= 1, got {tick_tokens}")
         self.cfg, self.opts, self.params = cfg, opts, params
@@ -171,7 +205,29 @@ class ServingEngine:
         self.index = np.zeros(n_slots, np.int32)       # per-slot position
         self.budget = np.zeros(n_slots, np.int32)
         self.tokens = np.zeros((n_slots, 1), np.int32)
-        self.caches = M.init_caches(cfg, n_slots, max_seq, jnp.float32, opts)
+        self.paged, self.page_size = paged, page_size
+        self.prefix_cache = prefix_cache
+        self.pool: Optional[KVPool] = None
+        if paged:
+            if max_seq % page_size:
+                raise ValueError(f"max_seq {max_seq} must divide by "
+                                 f"page_size {page_size}")
+            pages_per_slot = max_seq // page_size
+            if num_pages is None:
+                # worst case every slot fills up, +1 for the null page
+                num_pages = 1 + n_slots * pages_per_slot
+            self.pool = KVPool(num_pages, page_size, n_slots, pages_per_slot)
+            self.caches = M.init_caches(cfg, n_slots, max_seq, jnp.float32,
+                                        opts, paged=True, num_pages=num_pages,
+                                        page_size=page_size)
+            self._bytes_per_page = sum(
+                leaf.nbytes // num_pages for path, leaf in
+                jax.tree_util.tree_leaves_with_path(self.caches)
+                if is_paged_leaf(path))
+        else:
+            self.caches = M.init_caches(cfg, n_slots, max_seq, jnp.float32,
+                                        opts)
+            self._bytes_per_page = 0
         self.stats = EngineStats()
         self.key = jax.random.PRNGKey(seed)
 
@@ -195,23 +251,149 @@ class ServingEngine:
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
+    @property
+    def pending(self) -> int:
+        """Requests not yet finished: queued + in-flight in slots."""
+        return len(self.queue) + sum(r is not None for r in self.slots)
+
+    # -- paged bookkeeping ------------------------------------------------
+    def _prefix_page_keys(self, req: Request, n_prefix: int) -> List[bytes]:
+        """Prefix-closed digests, one per *full* page of the prompt prefix.
+        Key i covers every input that determines KV for positions
+        [0, (i+1)*page_size): the vision patches (one digest, repeated over
+        the prefix positions they fill) and the prompt tokens so far."""
+        if not self.prefix_cache:
+            return []
+        h = hashlib.sha1(f"{self.cfg.name}:{self.page_size}".encode())
+        items: List[bytes] = []
+        if n_prefix:
+            pd = hashlib.sha1(
+                np.ascontiguousarray(req.patches).tobytes()).digest()
+            items.extend([pd] * n_prefix)
+        items.extend(int(t).to_bytes(8, "little", signed=True)
+                     for t in req.prompt)
+        keys = []
+        for i, item in enumerate(items):
+            h.update(item)
+            if (i + 1) % self.page_size == 0:
+                keys.append(h.digest())
+        return keys
+
+    def _update_cache_stats(self):
+        st, pool = self.stats, self.pool
+        st.pages_in_use = pool.pages_in_use
+        st.pages_hwm = max(st.pages_hwm, pool.pages_hwm)
+        st.cache_bytes_hwm = max(st.cache_bytes_hwm,
+                                 pool.pages_in_use * self._bytes_per_page)
+        st.prefix_hits = pool.prefix_hits
+
+    def _page_table_device(self):
+        return jnp.asarray(self.pool.page_table)
+
+    def _preempt_slot(self, s: int):
+        """Evict a live slot under pool pressure: free its pages and requeue
+        the request from scratch. Under greedy sampling the regenerated
+        stream is identical (deterministic), so correctness is preserved;
+        under temperature sampling the retried stream may differ (the
+        degraded mode of an under-provisioned pool, not a crash)."""
+        req = self.slots[s]
+        self.pool.free_slot(s)
+        self.slots[s] = None
+        req.out_tokens = []
+        self.queue.insert(0, req)
+
+    def _ensure_pages(self, steps: int):
+        """Pre-allocate pages covering every position the next tick may
+        write (index .. index+steps-1 per live slot), and copy-on-write any
+        shared page in that range (none in normal engine flow — admission
+        only shares full prompt pages — but enforced, not assumed).
+
+        Pool pressure degrades instead of crashing: if growth fails, the
+        live slot holding the most pages (excluding the one being grown) is
+        preempted and retried later; a single request the pool cannot hold
+        at all is a sizing error and raises."""
+        copies = []
+        for s in range(self.n_slots):
+            if self.slots[s] is None:
+                continue
+            start = int(self.index[s])
+            # never reserve past the slot's remaining budget — backing pages
+            # a finishing slot cannot write could preempt a healthy one
+            end = min(start + min(steps, max(int(self.budget[s]), 1)),
+                      self.max_seq)
+            while True:
+                try:
+                    self.pool.ensure(s, end)
+                    copies += self.pool.prepare_write(s, start, end)
+                    break
+                except PoolExhausted:
+                    victims = [v for v in range(self.n_slots)
+                               if v != s and self.slots[v] is not None]
+                    if not victims:
+                        raise PoolExhausted(
+                            f"KV pool too small for a single request "
+                            f"(slot {s} needs pages for {end} positions)")
+                    self._preempt_slot(max(
+                        victims, key=lambda v: len(self.pool.slot_pages[v])))
+            self.slots[s].pages_used = len(self.pool.slot_pages[s])
+        if copies:
+            width = self.pool.pages_per_slot * self.n_slots
+            src = np.zeros(width, np.int32)
+            dst = np.zeros(width, np.int32)
+            for i, (a, b) in enumerate(copies):   # null->null pads are no-ops
+                src[i], dst[i] = a, b
+            self.caches = _copy_pages(self.caches, jnp.asarray(src),
+                                      jnp.asarray(dst))
+        self._update_cache_stats()
+
+    def _finish_slot(self, s: int, now: float):
+        req = self.slots[s]
+        req.done = True
+        req.t_done = now
+        if self.paged:
+            req.pages_used = len(self.pool.slot_pages[s])
+            self.pool.free_slot(s)
+            self._update_cache_stats()
+        self.finished.append(req)
+        self.slots[s] = None
+
     def _admit(self):
         for s in range(self.n_slots):
             # the inner loop retries the slot when a request already finishes
             # at prefill (EOS first token, or max_tokens == 1)
             while self.slots[s] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue[0]
+                n_prefix = (self.cfg.vision.num_tokens
+                            if req.patches is not None and self._vision
+                            else 0)
+                pos = n_prefix + len(req.prompt)
+                keys = (self._prefix_page_keys(req, n_prefix)
+                        if self.paged else [])
+                # capacity must cover the prompt AND the first decode write
+                # at position pos (requests finishing at prefill need none)
+                need = (0 if req.max_tokens <= 1
+                        else min(pos + 1, self.max_seq))
+                if self.paged and need and not self.pool.can_admit(need,
+                                                                   keys):
+                    if not any(r is not None for r in self.slots):
+                        # nothing in flight will ever free pages: sizing error
+                        raise PoolExhausted(
+                            f"KV pool ({self.pool.num_pages - 1} pages) too "
+                            f"small for request {req.uid} "
+                            f"({self.pool.num_pages_for(need)} pages)")
+                    # defer *before* paying for vision + prefill; retry when
+                    # a finishing slot frees pages
+                    return
+                self.queue.pop(0)
                 t0 = time.perf_counter()
                 batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-                n_prefix = 0
-                if req.patches is not None and self._vision is not None:
+                if n_prefix:
                     prefix = self._vision(self.params,
                                           jnp.asarray(req.patches[None]))
                     prefix.block_until_ready()
                     t1 = time.perf_counter()
                     self.stats.vision_time += t1 - t0
                     batch["prefix"] = prefix
-                    n_prefix = self.cfg.vision.num_tokens
                     t0 = t1
                 logits, cache1 = self._prefill(self.params, batch)
                 tok = int(self._sample_host(logits)[0])
@@ -219,15 +401,46 @@ class ServingEngine:
                 req.t_prefill = time.perf_counter()
                 self.stats.prefill_time += req.t_prefill - t0
                 req.out_tokens.append(tok)
-                if tok == self.eos or req.max_tokens <= 1:
+                # clamp generation to cache capacity: decode writes at
+                # positions pos..pos+budget-1, which must stay < max_seq in
+                # *both* layouts (unclamped, each layout clamps its scatter
+                # differently and the bit-equality contract breaks)
+                budget = min(req.max_tokens - 1, self.max_seq - pos)
+                if budget < req.max_tokens - 1:
+                    warnings.warn(
+                        f"request {req.uid}: max_tokens {req.max_tokens} "
+                        f"exceeds cache capacity (prompt {pos} + budget > "
+                        f"max_seq {self.max_seq}); clamping",
+                        RuntimeWarning, stacklevel=3)
+                if tok == self.eos or req.max_tokens <= 1 or budget <= 0:
                     req.done = True
                     req.t_done = req.t_prefill
                     self.finished.append(req)
                     continue
-                pos = n_prefix + len(req.prompt)
-                self.caches = _scatter_slot(self.caches, cache1, s)
+                if self.paged:
+                    try:
+                        pages, n_shared = self.pool.admit(s, pos, keys)
+                    except PoolExhausted:
+                        # can_admit() raced a cached-page eviction; defer
+                        self.queue.insert(0, req)
+                        req.out_tokens.pop()
+                        return
+                    req.pages_used = len(pages)
+                    req.pages_shared = n_shared
+                    # shared pages already hold this prefix's KV — route
+                    # their rows to the null sink instead of re-writing
+                    dest = np.zeros(self.pool.pages_per_slot, np.int32)
+                    dest[n_shared:len(pages)] = pages[n_shared:]
+                    self.caches = _scatter_pages(self.caches, cache1,
+                                                 jnp.asarray(dest),
+                                                 self.page_size)
+                    self.caches = _scatter_slot(self.caches, cache1, s,
+                                                skip_paged=True)
+                    self._update_cache_stats()
+                else:
+                    self.caches = _scatter_slot(self.caches, cache1, s)
                 self.index[s] = pos
-                self.budget[s] = req.max_tokens - 1
+                self.budget[s] = budget
                 self.tokens[s, 0] = tok
                 self.slots[s] = req
 
@@ -238,10 +451,17 @@ class ServingEngine:
         active = [s for s in range(self.n_slots) if self.slots[s] is not None]
         if not active:
             return 0
+        pt = None
+        if self.paged:
+            self._ensure_pages(1)
+            pt = self._page_table_device()
+            # growth may have preempted a slot under pool pressure
+            active = [s for s in range(self.n_slots)
+                      if self.slots[s] is not None]
         t0 = time.perf_counter()
         logits, self.caches = self._decode(
             self.params, jnp.asarray(self.tokens), self.caches,
-            jnp.asarray(self.index))
+            jnp.asarray(self.index), pt)
         nxt = np.asarray(self._sample_host(logits))
         now = time.perf_counter()
         self.stats.decode_syncs += 1
@@ -256,10 +476,7 @@ class ServingEngine:
             self.index[s] += 1
             self.budget[s] -= 1
             if tok == self.eos or self.budget[s] <= 0:
-                req.done = True
-                req.t_done = now
-                self.finished.append(req)
-                self.slots[s] = None
+                self._finish_slot(s, now)
             else:
                 self.tokens[s, 0] = tok
         return len(active)
@@ -270,6 +487,13 @@ class ServingEngine:
         active = [s for s in range(self.n_slots) if self.slots[s] is not None]
         if not active:
             return 0
+        pt = None
+        if self.paged:
+            self._ensure_pages(self.tick_tokens)
+            pt = self._page_table_device()
+            # growth may have preempted a slot under pool pressure
+            active = [s for s in range(self.n_slots)
+                      if self.slots[s] is not None]
         t0 = time.perf_counter()
         done0 = np.asarray([self.slots[s] is None
                             for s in range(self.n_slots)])
@@ -277,7 +501,7 @@ class ServingEngine:
          steps) = self._tick(
             self.params, jnp.asarray(self.tokens), self.caches,
             jnp.asarray(self.index), jnp.asarray(self.budget),
-            jnp.asarray(done0), self.key)
+            jnp.asarray(done0), self.key, pt)
         out_h, n_emit_h, idx_h, bud_h, done_h, tok_h, steps_h = \
             jax.device_get((out, n_emit, index, budget, done, tokens, steps))
         now = time.perf_counter()
@@ -295,32 +519,78 @@ class ServingEngine:
             req.out_tokens.extend(int(t) for t in out_h[s, :k])
             emitted += k
             if done_h[s]:
-                req.done = True
-                req.t_done = now
-                self.finished.append(req)
-                self.slots[s] = None
+                self._finish_slot(s, now)
         self.stats.tokens_decoded += emitted
         return emitted
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
+        """Drive ticks until the queue and slots drain, or ``max_ticks`` is
+        hit. A hit tick budget is surfaced (warning + ``pending`` count)
+        rather than silently returning partial work."""
         step = self.step_fused if self.fused else self.step
         ticks = 0
-        while (self.queue or any(r is not None for r in self.slots)) \
-                and ticks < max_ticks:
+        while self.pending and ticks < max_ticks:
             step()
             ticks += 1
+        if self.pending:
+            warnings.warn(
+                f"ServingEngine.run: tick budget ({max_ticks}) exhausted "
+                f"with {self.pending} requests pending "
+                f"({len(self.queue)} queued, "
+                f"{sum(r is not None for r in self.slots)} in flight)",
+                RuntimeWarning, stacklevel=2)
         return self.finished
 
 
-def _scatter_slot(caches, cache1, slot: int):
+def _scatter_slot(caches, cache1, slot: int, skip_paged: bool = False):
     """Copy a batch-1 prefill cache into slot `slot` of the slot caches.
     The batch axis of every leaf comes from the cache pytree's explicit
     annotation (stacks.cache_batch_axis): block caches are layer-stacked, so
-    batch sits at axis 1; tail caches carry it at axis 0."""
+    batch sits at axis 1; tail caches carry it at axis 0. With
+    ``skip_paged`` the attention k/v leaves are left untouched (they live in
+    the page pool and are filled by ``_scatter_pages``)."""
     def scatter(path, big, small):
+        if skip_paged and is_paged_leaf(path):
+            return big
         axis = cache_batch_axis(path)
         assert small.shape[axis] == 1, (path, small.shape, axis)
         idx = [slice(None)] * big.ndim
         idx[axis] = slice(slot, slot + 1)
         return big.at[tuple(idx)].set(small.astype(big.dtype))
     return jax.tree_util.tree_map_with_path(scatter, caches, cache1)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",), donate_argnums=0)
+def _scatter_pages(caches, cache1, dest_pages, page_size: int):
+    """Scatter a batch-1 dense prefill cache into pool pages.
+
+    ``dest_pages`` [pages_per_slot] int32 holds the physical destination for
+    each prompt page; entries routed to 0 (the null page) are write sinks —
+    used both for prefix-shared pages (already holding identical KV) and for
+    pages past the slot's allocation."""
+    def scatter(path, big, small):
+        if not is_paged_leaf(path):
+            return big
+        ax = cache_batch_axis(path)   # batch axis of the dense prefill leaf
+        if ax == 1:                   # blocks: [nb, 1, S, K, h]
+            nb, _, seq = small.shape[:3]
+            rows = small.reshape(nb, seq // page_size, page_size,
+                                 *small.shape[3:])
+            return big.at[:, dest_pages].set(rows.astype(big.dtype))
+        _, seq = small.shape[:2]      # tail: [1, S, K, h]
+        rows = small.reshape(seq // page_size, page_size, *small.shape[2:])
+        return big.at[dest_pages].set(rows.astype(big.dtype))
+    return jax.tree_util.tree_map_with_path(scatter, caches, cache1)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _copy_pages(caches, src_pages, dst_pages):
+    """Device-side page copies for copy-on-write: page dst <- page src for
+    every pair (padding pairs are 0 -> 0, a null-page no-op)."""
+    def copy(path, big):
+        if not is_paged_leaf(path):
+            return big
+        if cache_batch_axis(path) == 1:   # blocks: [nb, P, ps, K, h]
+            return big.at[:, dst_pages].set(big[:, src_pages])
+        return big.at[dst_pages].set(big[src_pages])
+    return jax.tree_util.tree_map_with_path(copy, caches)

@@ -1,0 +1,268 @@
+"""Paged KV-cache block allocator (host-side control plane).
+
+The device holds one KV pool per attention layer, laid out
+``[num_pages, page_size, K, h]`` (see ``stacks.cache_template(paged=True)``).
+This module owns the *metadata*: which physical pages belong to which slot,
+page refcounts, the free list, and the prefix cache. All decisions are made
+on the host between engine ticks; the device only ever sees the resulting
+``[n_slots, pages_per_slot]`` int32 page table (and an occasional page-copy
+for copy-on-write), so the data plane stays fixed-shape and jit-friendly.
+
+Design points (vLLM's block allocator, re-expressed for fixed-shape XLA):
+
+- **Null page.** Physical page 0 is reserved: padding entries of every table
+  row point at it, retired slots' rows are reset to it (so a done slot still
+  riding through a fused tick writes into a sink, never into a page that has
+  been handed to another slot), and its contents are never read unmasked.
+- **Refcounting + prefix cache.** Full pages holding a prompt prefix are
+  content-addressed by a prefix-closed digest (the hash covers *all*
+  positions up to the page's end, so a hit implies the entire prefix
+  matches). Repeated robot observations — the same camera frame +
+  instruction resubmitted every control step — share those pages instead of
+  holding duplicate KV, and ``prefix_hits`` counts the pages saved.
+- **Copy-on-write.** Writing into a page with refcount > 1 first copies it
+  to a fresh page (``prepare_write`` returns the (src, dst) pairs; the
+  engine materializes them with one jitted gather/scatter). The engine's
+  admit path only ever shares *full* prompt pages, which decode never
+  rewrites, so COW fires only for explicit ``fork`` users (beam /
+  speculative decoding) — but the invariant is enforced here, not assumed.
+- **Cached-page retention.** When a hashed page's refcount drops to zero it
+  is *retained* (LRU) rather than freed, so the next identical observation
+  still hits even after the first request finished. Retained pages are
+  reclaimed on demand, oldest first, when the free list runs dry — cache
+  capacity costs nothing until there is real allocation pressure.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """No free pages left; admission should defer (re-queue) the request."""
+
+
+class KVPool:
+    """Block allocator for one serving engine's paged KV caches.
+
+    Parameters
+    ----------
+    num_pages: total physical pages, *including* the reserved null page 0.
+    page_size: tokens per page.
+    n_slots / pages_per_slot: shape of the page table handed to the device.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, n_slots: int,
+                 pages_per_slot: int):
+        if num_pages < 2:
+            raise ValueError("need at least one allocatable page + null page")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self.pages_per_slot = pages_per_slot
+        self.refcount = np.zeros(num_pages, np.int32)
+        self.refcount[0] = 1                       # null page, never freed
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.page_table = np.zeros((n_slots, pages_per_slot), np.int32)
+        self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        self._hash_to_page: Dict[bytes, int] = {}
+        self._page_hash: Dict[int, bytes] = {}
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref==0
+        # stats
+        self.prefix_hits = 0                       # pages reused via prefix cache
+        self.pages_hwm = 0                         # high-water pages in use
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def pages_in_use(self) -> int:
+        """Pages referenced by live slots (excludes retained cache pages)."""
+        return (self.num_pages - 1) - len(self._free) - len(self._cached)
+
+    @property
+    def cached_pages(self) -> int:
+        """Zero-ref prefix pages retained for future hits (reclaimable)."""
+        return len(self._cached)
+
+    def num_pages_for(self, length: int) -> int:
+        return -(-length // self.page_size)
+
+    def slot_len_capacity(self, slot: int) -> int:
+        return len(self.slot_pages[slot]) * self.page_size
+
+    # -- allocation core ---------------------------------------------------
+    def _alloc(self) -> int:
+        if self._free:
+            pid = self._free.pop()
+        elif self._cached:
+            pid, _ = self._cached.popitem(last=False)   # evict oldest
+            self._drop_hash(pid)
+        else:
+            raise PoolExhausted(
+                f"KV pool exhausted: {self.num_pages - 1} pages all in use")
+        self.refcount[pid] = 1
+        self.pages_hwm = max(self.pages_hwm, self.pages_in_use)
+        return pid
+
+    def _drop_hash(self, pid: int):
+        key = self._page_hash.pop(pid, None)
+        if key is not None and self._hash_to_page.get(key) == pid:
+            del self._hash_to_page[key]
+
+    def _incref(self, pid: int):
+        if self.refcount[pid] == 0:                     # revive cached page
+            self._cached.pop(pid, None)
+        self.refcount[pid] += 1
+
+    def _decref(self, pid: int):
+        assert self.refcount[pid] > 0, pid
+        self.refcount[pid] -= 1
+        if self.refcount[pid] == 0:
+            if pid in self._page_hash:
+                self._cached[pid] = None                # retain for reuse
+            else:
+                self._free.append(pid)
+
+    def _sync_table_row(self, slot: int):
+        row = self.page_table[slot]
+        row[:] = 0
+        pages = self.slot_pages[slot]
+        row[:len(pages)] = pages
+
+    # -- slot lifecycle ----------------------------------------------------
+    def can_admit(self, seq_len: int,
+                  prefix_keys: Sequence[bytes] = ()) -> bool:
+        """Whether ``admit`` would succeed right now, without touching any
+        state. Lets the engine check capacity *before* paying for vision +
+        prefill on a request it would only have to defer."""
+        n_pages = self.num_pages_for(seq_len)
+        if n_pages > self.pages_per_slot:
+            return True     # let admit() raise the ValueError
+        n_full = seq_len // self.page_size
+        n_shared = shared_cached = 0
+        for i in range(min(n_full, len(prefix_keys))):
+            pid = self._hash_to_page.get(prefix_keys[i])
+            if pid is None:
+                break
+            n_shared += 1
+            if self.refcount[pid] == 0:
+                shared_cached += 1   # a hit revives it: not reclaimable too
+        supply = len(self._free) + len(self._cached) - shared_cached
+        return n_pages - n_shared <= supply
+
+    def admit(self, slot: int, seq_len: int,
+              prefix_keys: Sequence[bytes] = ()) -> Tuple[List[int], int]:
+        """Allocate pages covering ``seq_len`` positions for ``slot``.
+
+        ``prefix_keys`` are prefix-closed digests for each *full* page of
+        the prompt (key i covers positions [0, (i+1)*page_size)). A leading
+        run of keys already in the prefix cache is shared (refcount bump, no
+        new pages); everything else is freshly allocated and the fresh full
+        pages are registered so later requests can hit them.
+
+        Atomic: on PoolExhausted, nothing is retained. Returns
+        (page ids, n_shared).
+        """
+        assert not self.slot_pages[slot], f"slot {slot} still holds pages"
+        n_pages = self.num_pages_for(seq_len)
+        if n_pages > self.pages_per_slot:
+            raise ValueError(f"seq_len {seq_len} exceeds slot capacity "
+                             f"{self.pages_per_slot * self.page_size}")
+        n_full = seq_len // self.page_size
+        pages: List[int] = []
+        n_shared = 0
+        for i in range(min(n_full, len(prefix_keys))):
+            pid = self._hash_to_page.get(prefix_keys[i])
+            if pid is None:
+                break
+            self._incref(pid)
+            pages.append(pid)
+            n_shared += 1
+        try:
+            for i in range(n_shared, n_pages):
+                pid = self._alloc()
+                pages.append(pid)
+                if i < n_full and i < len(prefix_keys):
+                    self._hash_to_page[prefix_keys[i]] = pid
+                    self._page_hash[pid] = prefix_keys[i]
+        except PoolExhausted:
+            for pid in pages[:n_shared]:
+                self._decref(pid)
+            for pid in pages[n_shared:]:
+                # fresh pages hold no KV yet — drop their hash registration
+                # so the rollback cannot leave prefix-cache entries pointing
+                # at never-written pages, and free them outright
+                self._drop_hash(pid)
+                self.refcount[pid] = 0
+                self._free.append(pid)
+            raise
+        self.prefix_hits += n_shared
+        self.slot_pages[slot] = pages
+        self._sync_table_row(slot)
+        return pages, n_shared
+
+    def ensure(self, slot: int, length: int) -> List[int]:
+        """Grow ``slot`` to cover ``length`` positions (capped at slot
+        capacity). Returns the freshly allocated page ids."""
+        length = min(length, self.pages_per_slot * self.page_size)
+        fresh: List[int] = []
+        while self.slot_len_capacity(slot) < length:
+            pid = self._alloc()
+            self.slot_pages[slot].append(pid)
+            fresh.append(pid)
+        if fresh:
+            self._sync_table_row(slot)
+        return fresh
+
+    def prepare_write(self, slot: int, start: int,
+                      end: int) -> List[Tuple[int, int]]:
+        """Make positions [start, end) of ``slot`` safely writable:
+        copy-on-write any shared page in the range. Returns (src, dst) page
+        pairs the caller must copy on device before writing. Atomic: if the
+        pool runs out mid-COW, completed swaps are rolled back (the caller
+        never learns of pairs it would then fail to copy) and the exception
+        propagates with the slot in its pre-call state."""
+        copies: List[Tuple[int, int]] = []
+        pages = self.slot_pages[slot]
+        idxs: List[int] = []
+        try:
+            for i in range(start // self.page_size,
+                           min(self.num_pages_for(end), len(pages))):
+                pid = pages[i]
+                if self.refcount[pid] > 1:
+                    new = self._alloc()
+                    self._decref(pid)
+                    pages[i] = new
+                    copies.append((pid, new))
+                    idxs.append(i)
+        except PoolExhausted:
+            for i, (old, new) in zip(reversed(idxs), reversed(copies)):
+                self.refcount[new] = 0
+                self._free.append(new)
+                self._incref(old)        # was > 1 pre-COW, so never cached
+                pages[i] = old
+            self._sync_table_row(slot)
+            raise
+        if copies:
+            self._sync_table_row(slot)
+        return copies
+
+    def fork(self, src: int, dst: int):
+        """Share all of ``src``'s pages with ``dst`` (zero-copy; later
+        writes on either side trigger copy-on-write via prepare_write)."""
+        assert not self.slot_pages[dst], f"slot {dst} still holds pages"
+        for pid in self.slot_pages[src]:
+            self._incref(pid)
+        self.slot_pages[dst] = list(self.slot_pages[src])
+        self._sync_table_row(dst)
+
+    def free_slot(self, slot: int):
+        """Release the slot's pages (eviction on finish). Shared pages
+        survive while other slots or the prefix cache's future hits need
+        them; the table row resets to the null page so stale device-side
+        writes land in the sink."""
+        for pid in self.slot_pages[slot]:
+            self._decref(pid)
+        self.slot_pages[slot] = []
+        self.page_table[slot, :] = 0

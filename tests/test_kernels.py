@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention import (decode_attention,
+                                            paged_decode_attention)
 from repro.kernels.decode_attention import ref as dref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention import ref as fref
@@ -56,6 +57,121 @@ def test_decode_attention(B, S, N, K, h, idx, window, dtype):
     exp = dref.decode_attention_ref(q, kc, vc, idx, window=window)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,N,K,h,bk", [
+    (3, 768, 8, 2, 64, 256), (2, 512, 4, 4, 32, 512), (4, 384, 6, 2, 32, 128),
+])
+@pytest.mark.parametrize("window", [0, 200])
+def test_decode_attention_per_slot_index(B, S, N, K, h, bk, window):
+    """Per-slot [B] index vectors (continuous batching): every slot masks
+    and early-exits against its own position."""
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, N, h))
+    kc = jax.random.normal(ks[1], (B, S, K, h))
+    vc = jax.random.normal(ks[2], (B, S, K, h))
+    idx = jax.random.randint(ks[3], (B,), 0, S, jnp.int32)
+    out = decode_attention(q, kc, vc, idx, window=window, bk=bk,
+                           interpret=True)
+    exp = dref.decode_attention_ref(q, kc, vc, idx, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("S,bk,idx", [
+    (600, 512, 599),   # the regression: nk = S // bk used to drop 88 tail
+    (600, 512, 100),   # positions silently whenever S % bk != 0
+    (130, 64, 129),
+    (48, 512, 47),     # bk > S: single padded block
+])
+@pytest.mark.parametrize("window", [0, 96])
+def test_decode_attention_non_block_aligned(S, bk, idx, window):
+    """S % bk != 0 must not drop the KV tail (positions >= (S//bk)*bk)."""
+    B, N, K, h = 2, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, N, h))
+    kc = jax.random.normal(ks[1], (B, S, K, h))
+    vc = jax.random.normal(ks[2], (B, S, K, h))
+    out = decode_attention(q, kc, vc, idx, window=window, bk=bk,
+                           interpret=True)
+    exp = dref.decode_attention_ref(q, kc, vc, idx, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,npg,ps,N,K,h", [
+    (3, 8, 16, 8, 2, 64), (2, 4, 32, 4, 4, 32), (1, 16, 8, 6, 1, 32),
+])
+@pytest.mark.parametrize("window", [0, 40])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(B, npg, ps, N, K, h, window, dtype):
+    """Paged kernel (page-table gather via scalar-prefetched index map)
+    against the gather-then-dense oracle, with a scrambled page table so
+    physical order != logical order."""
+    P = B * npg + 3
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, N, h), dtype)
+    kp = jax.random.normal(ks[1], (P, ps, K, h), dtype)
+    vp = jax.random.normal(ks[2], (P, ps, K, h), dtype)
+    # distinct physical pages, never the null page 0, scrambled order
+    perm = jax.random.permutation(ks[3], jnp.arange(1, P))[:B * npg]
+    pt = perm.reshape(B, npg).astype(jnp.int32)
+    idx = jax.random.randint(ks[3], (B,), 0, npg * ps, jnp.int32)
+    out = paged_decode_attention(q, kp, vp, pt, idx, window=window,
+                                 interpret=True)
+    exp = dref.paged_decode_attention_ref(q, kp, vp, pt, idx, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_layers_decode_routes_through_kernels():
+    """layers.attention_decode / attention_decode_paged with use_pallas route
+    through the flash-decode kernels and match their einsum fallbacks."""
+    from repro.models.layers import (ModelOptions, attention_decode,
+                                     attention_decode_paged)
+    opts = ModelOptions(use_pallas=True, pallas_interpret=True)
+    B, S, N, K, h, ps = 2, 128, 4, 2, 32, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, N, h))
+    kc = jax.random.normal(ks[1], (B, S, K, h))
+    vc = jax.random.normal(ks[2], (B, S, K, h))
+    idx = jnp.asarray([100, 7], jnp.int32)
+    out = attention_decode(q, kc, vc, idx, window=0, opts=opts)
+    exp = attention_decode(q, kc, vc, idx, window=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+    npg = S // ps
+    kp = kc.reshape(B * npg, ps, K, h)
+    vp = vc.reshape(B * npg, ps, K, h)
+    pt = jnp.arange(B * npg, dtype=jnp.int32).reshape(B, npg)
+    out_p = attention_decode_paged(q, kp, vp, pt, idx, window=0, opts=opts)
+    exp_p = attention_decode_paged(q, kp, vp, pt, idx, window=0)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(exp_p),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_matches_dense_layout():
+    """A paged cache whose table is the identity over contiguous pages is
+    exactly the dense cache: both kernels and both oracles must agree."""
+    B, S, N, K, h, ps = 2, 256, 4, 2, 32, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, N, h))
+    kc = jax.random.normal(ks[1], (B, S, K, h))
+    vc = jax.random.normal(ks[2], (B, S, K, h))
+    npg = S // ps
+    kp = kc.reshape(B * npg, ps, K, h)
+    vp = vc.reshape(B * npg, ps, K, h)
+    pt = jnp.arange(B * npg, dtype=jnp.int32).reshape(B, npg)
+    idx = jnp.asarray([200, 31], jnp.int32)
+    dense = decode_attention(q, kc, vc, idx, bk=128, interpret=True)
+    paged = paged_decode_attention(q, kp, vp, pt, idx, interpret=True)
+    exp = dref.decode_attention_ref(q, kc, vc, idx)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
 
 
 @pytest.mark.parametrize("B,S,H,P,N,Q", [
