@@ -1,6 +1,9 @@
 """Reproduction fidelity: every published claim of the paper, validated."""
 from __future__ import annotations
 
+DESCRIPTION = ("Reproduction fidelity: validates every published claim of "
+               "the paper and fails on any deviation")
+
 from repro.core.claims import validate_all
 
 

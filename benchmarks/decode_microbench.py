@@ -3,6 +3,9 @@ container with reduced configs — sanity numbers for the harness itself, and
 the phase-latency decomposition measured (not simulated) end to end."""
 from __future__ import annotations
 
+DESCRIPTION = ("Measured wall-clock decode/prefill/train microbenchmarks on "
+               "reduced configs — the harness sanity numbers, not simulation")
+
 import time
 
 import jax

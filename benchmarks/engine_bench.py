@@ -9,6 +9,10 @@ doubles as a CI smoke gate for the serving stack.
 """
 from __future__ import annotations
 
+DESCRIPTION = ("Fused vs per-token serving engine: gates bit-identical "
+               "greedy streams and decode host syncs <= ceil(N/K); reports "
+               "tokens/s for both paths")
+
 import math
 import time
 

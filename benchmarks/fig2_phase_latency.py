@@ -5,6 +5,10 @@ fraction ~75%, Thor/Orin e2e speedup ~1.4x, 200-300x off the 10 Hz target).
 """
 from __future__ import annotations
 
+DESCRIPTION = ("Paper Fig. 2: simulated MolmoAct-7B vision/prefill/decode "
+               "phase latency on Jetson Orin + Thor; gates the ~75% "
+               "action-generation fraction and Thor/Orin speedup")
+
 from repro.configs import get_config
 from repro.core.hardware import ORIN, THOR
 from repro.core.xpu_sim import simulate_vla

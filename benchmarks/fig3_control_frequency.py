@@ -3,6 +3,10 @@ Table-1 edge systems. Asserts the paper's conclusion: bandwidth (GDDR7/PIM)
 raises frequency but no configuration reaches 10 Hz at 100B."""
 from __future__ import annotations
 
+DESCRIPTION = ("Paper Fig. 3: control frequency vs model scale (7B-100B) "
+               "across Table-1 edge systems; gates that no configuration "
+               "reaches 10 Hz at 100B")
+
 from repro.core.hardware import TABLE1, get_hardware
 from repro.core.scaling import scaling_sweep
 from repro.core.xpu_sim import simulate_vla

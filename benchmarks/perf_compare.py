@@ -2,6 +2,9 @@
 artifact (artifacts/dryrun/*-<tag>.json vs the untagged baseline)."""
 from __future__ import annotations
 
+DESCRIPTION = ("Baseline-vs-optimized roofline deltas for every tagged "
+               "hillclimb artifact (perf regression ledger)")
+
 import json
 import os
 

@@ -2,6 +2,9 @@
 dry-run artifacts (artifacts/dryrun/*.json)."""
 from __future__ import annotations
 
+DESCRIPTION = ("Roofline decomposition per (arch x shape x mesh) from the "
+               "dry-run HLO artifacts under artifacts/dryrun/")
+
 import os
 
 from repro.roofline import load_artifacts, markdown_table, to_terms

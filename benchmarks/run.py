@@ -2,6 +2,11 @@
 report and measured microbenchmarks. Prints ``name,us_per_call,derived``.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...]
+    PYTHONPATH=src python -m benchmarks.run --list
+
+Every module carries a ``DESCRIPTION`` (one line: what it measures and what
+it gates) surfaced by ``--list`` — the same text docs/benchmarks.md expands
+on, so the tool and the docs can't drift apart silently.
 """
 from __future__ import annotations
 
@@ -30,7 +35,17 @@ MODULES = {
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default="")
+    p.add_argument("--list", action="store_true",
+                   help="print each benchmark's name and DESCRIPTION, "
+                        "then exit")
     args = p.parse_args()
+    if args.list:
+        width = max(len(k) for k in MODULES)
+        for key, mod in MODULES.items():
+            desc = getattr(mod, "DESCRIPTION", None) or next(
+                iter((mod.__doc__ or "").strip().splitlines()), "")
+            print(f"{key:<{width}}  {desc}")
+        return
     selected = args.only.split(",") if args.only else list(MODULES)
 
     rows = []

@@ -2,6 +2,9 @@
 per-platform single-stream decode bound for MolmoAct-7B."""
 from __future__ import annotations
 
+DESCRIPTION = ("Paper Table 1: hardware catalog echo, derived ridge points, "
+               "and the per-platform single-stream decode bound")
+
 from repro.configs import get_config
 from repro.core.hardware import CATALOG, TABLE1, get_hardware
 from repro.core.xpu_sim import simulate_vla

@@ -28,6 +28,10 @@ def main(argv=None):
     p.add_argument("--page-size", type=int, default=8,
                    help="tokens per KV page (small default so the 12-token "
                         "demo prompts span a full, shareable page)")
+    p.add_argument("--kv-dtype", default="bf16",
+                   choices=["bf16", "int8", "fp8"],
+                   help="paged pool storage (int8/fp8 = quantized pages "
+                        "with per-page scales; needs --paged)")
     p.add_argument("--pallas", action="store_true",
                    help="route decode through the flash-decode Pallas "
                         "kernels (interpret mode on CPU: slow, real path)")
@@ -40,7 +44,8 @@ def main(argv=None):
     eng = ServingEngine(cfg, opts, params, n_slots=4, max_seq=96, eos=-1,
                         fused=not args.reference,
                         tick_tokens=args.tick_tokens,
-                        paged=args.paged, page_size=args.page_size)
+                        paged=args.paged, page_size=args.page_size,
+                        kv_dtype=args.kv_dtype)
 
     rng = np.random.default_rng(0)
     shared_prompt = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
@@ -68,7 +73,7 @@ def main(argv=None):
     print(f"engine phases: vision {ph['vision']:.3f}s | "
           f"prefill {ph['prefill']:.3f}s | decode {ph['decode']:.3f}s")
     if args.paged:
-        print(f"paged KV pool: pages_hwm {st.pages_hwm} | "
+        print(f"paged KV pool ({args.kv_dtype}): pages_hwm {st.pages_hwm} | "
               f"cache_bytes_hwm {st.cache_bytes_hwm} | "
               f"prefix_hits {st.prefix_hits}")
     print("per-request phases (queue+prefill | decode):")

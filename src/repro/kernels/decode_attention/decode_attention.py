@@ -46,12 +46,17 @@ def _block_live(index, k_start: int, bk: int, window: int):
 
 def _flash_decode_body(index, ik, q_ref, k_ref, v_ref, o_ref,
                        m_scr, l_scr, acc_scr, *, bk: int, nk: int,
-                       window: int):
+                       window: int, k_scale=None, v_scale=None):
     """One KV block of the online-softmax flash-decode update. ``index`` is
     this row's current position; ``ik`` the block's position in the logical
     sequence (block covers positions [ik*bk, (ik+1)*bk)). Positions past
     ``index`` (including any out-of-bounds tail lanes of a non-aligned
-    cache) are masked before they can contribute."""
+    cache) are masked before they can contribute.
+
+    ``k_scale``/``v_scale`` (optional f32 scalars) dequantize an int8/fp8 KV
+    block inside the VMEM tile: the block's codes are multiplied by the
+    per-(page, head) scale right after the fp32 upcast, so HBM only ever
+    streams 1-byte codes and the online softmax still runs in fp32."""
     @pl.when(ik == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
@@ -65,6 +70,10 @@ def _flash_decode_body(index, ik, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, :, 0, :].astype(jnp.float32)      # [G, h]
         k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bk, h]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if k_scale is not None:
+            k = k * k_scale
+        if v_scale is not None:
+            v = v * v_scale
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         s *= 1.0 / np.sqrt(q.shape[-1])                # [G, bk]

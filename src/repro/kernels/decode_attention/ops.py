@@ -27,11 +27,16 @@ def decode_attention(q, k_cache, v_cache, index, *,
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, page_table, index, *,
+                           k_scales=None, v_scales=None,
                            window: int = GLOBAL_WINDOW,
                            interpret: bool = False):
     """Single-token flash-decode against a paged KV pool. q [B,N,h]; pages
     [num_pages, page_size, K, h]; page_table [B, npg] int32; index scalar or
-    per-slot [B] vector of current positions."""
+    per-slot [B] vector of current positions. For quantized (int8/fp8)
+    pools pass the sibling per-page-per-head scales ``k_scales``/``v_scales``
+    [num_pages, K] f32 — the kernel gathers them through the same page-table
+    index map and dequantizes inside the VMEM tile."""
     return paged_decode_attention_kernel(q, k_pages, v_pages, page_table,
-                                         index, window=window,
+                                         index, k_scales=k_scales,
+                                         v_scales=v_scales, window=window,
                                          interpret=interpret)

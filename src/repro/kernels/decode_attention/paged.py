@@ -1,4 +1,4 @@
-"""Paged flash-decode Pallas TPU kernel.
+"""Paged flash-decode Pallas TPU kernel (bf16 or quantized int8/fp8 pages).
 
 Same bandwidth-tuned single-token GQA attention as ``decode_attention`` —
 the online-softmax body is literally shared (``_flash_decode_body``) — but
@@ -14,6 +14,13 @@ from HBM. Fully-masked pages (past a slot's position, or entirely older
 than its sliding window) are remapped to the null page so their DMA is
 never issued, and their compute is skipped by ``pl.when`` — vLLM's paged
 attention early-exit, re-expressed for the TPU's sequential grid.
+
+Quantized pools (``k_scales``/``v_scales`` given) stream 1-byte codes plus
+one ``[num_pages, K]`` f32 scale array per pool, gathered through the same
+page-table index map (one (1, 1) scale block per grid cell, remapped in
+lockstep with its value page). Dequantization — ``code * scale`` — happens
+inside the VMEM tile right after the fp32 upcast, so HBM traffic per token
+drops to ~1 byte per cache element while the online softmax stays fp32.
 
 Page 0 is the pool's reserved null page: padding entries in the table point
 at it and its contribution is always masked.
@@ -39,12 +46,26 @@ def _paged_kernel(pt_ref, idx_ref, q_ref, k_ref, v_ref, o_ref,
                        bk=ps, nk=npg, window=window)
 
 
+def _paged_quant_kernel(pt_ref, idx_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                        o_ref, m_scr, l_scr, acc_scr, *, ps: int, npg: int,
+                        window: int):
+    _flash_decode_body(idx_ref[pl.program_id(0)], pl.program_id(2),
+                       q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                       bk=ps, nk=npg, window=window,
+                       k_scale=ks_ref[0, 0], v_scale=vs_ref[0, 0])
+
+
 def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, index, *,
+                                  k_scales=None, v_scales=None,
                                   window: int = GLOBAL_WINDOW,
                                   interpret: bool = False):
-    """q [B,N,h]; k/v pages [num_pages, page_size, K, h]; page_table
-    [B, npg] int32 physical page ids; index int32 scalar or per-slot [B]
-    vector of current positions (< npg * page_size). Returns [B,N,h]."""
+    """q [B,N,h]; k/v pages [num_pages, page_size, K, h] (bf16/f32, or
+    int8/fp8 codes when ``k_scales``/``v_scales`` [num_pages, K] f32 are
+    given — pass both or neither); page_table [B, npg] int32 physical page
+    ids; index int32 scalar or per-slot [B] vector of current positions
+    (< npg * page_size). Returns [B,N,h] in q's dtype."""
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales, or neither")
     B, N, h = q.shape
     ps, K = k_pages.shape[1], k_pages.shape[2]
     npg = page_table.shape[1]
@@ -62,18 +83,34 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, index, *,
         live = _block_live(idx_ref[b], ip * ps, ps, window)
         return jnp.where(live, pt_ref[b, ip], 0), 0, kh, 0
 
-    kernel = functools.partial(_paged_kernel, ps=ps, npg=npg, window=window)
+    def scale_map(b, kh, ip, pt_ref, idx_ref):
+        # per-(page, head) scale block, remapped in lockstep with kv_map so
+        # a dead page's scale DMA is elided along with its value DMA
+        live = _block_live(idx_ref[b], ip * ps, ps, window)
+        return jnp.where(live, pt_ref[b, ip], 0), kh
+
+    q_spec = pl.BlockSpec((1, G, 1, h),
+                          lambda b, kh, ip, pt_ref, idx_ref: (b, 0, kh, 0))
+    in_specs = [q_spec,
+                pl.BlockSpec((1, ps, 1, h), kv_map),
+                pl.BlockSpec((1, ps, 1, h), kv_map)]
+    operands = [qg, k_pages, v_pages]
+    if k_scales is None:
+        kernel = functools.partial(_paged_kernel, ps=ps, npg=npg,
+                                   window=window)
+    else:
+        kernel = functools.partial(_paged_quant_kernel, ps=ps, npg=npg,
+                                   window=window)
+        in_specs += [pl.BlockSpec((1, 1), scale_map),
+                     pl.BlockSpec((1, 1), scale_map)]
+        operands += [jnp.asarray(k_scales, jnp.float32),
+                     jnp.asarray(v_scales, jnp.float32)]
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, G, 1, h),
-                             lambda b, kh, ip, pt_ref, idx_ref: (b, 0, kh, 0)),
-                pl.BlockSpec((1, ps, 1, h), kv_map),
-                pl.BlockSpec((1, ps, 1, h), kv_map),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, G, 1, h),
                                    lambda b, kh, ip, pt_ref, idx_ref:
                                    (b, 0, kh, 0)),
@@ -85,5 +122,5 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, index, *,
         ),
         out_shape=jax.ShapeDtypeStruct((B, G, K, h), q.dtype),
         interpret=interpret,
-    )(pt, idx, qg, k_pages, v_pages)
+    )(pt, idx, *operands)
     return out.swapaxes(1, 2).reshape(B, N, h)

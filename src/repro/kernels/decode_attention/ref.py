@@ -38,6 +38,15 @@ def gather_pages(pages, page_table):
     return g.reshape(B, npg * pages.shape[1], *pages.shape[2:])
 
 
+def gather_scales(scales, page_table, page_size: int):
+    """Materialize dense per-position scales from per-page scales.
+    scales [num_pages, K]; page_table [B, npg] -> [B, npg*page_size, K, 1]
+    (every position of logical page p carries that page's scale), the factor
+    that dequantizes the matching ``gather_pages`` output."""
+    g = scales[page_table]                       # [B, npg, K]
+    return jnp.repeat(g, page_size, axis=1)[..., None]
+
+
 def paged_decode_attention_ref(q, k_pages, v_pages, page_table, index,
                                window: int = GLOBAL_WINDOW):
     """Oracle for the paged kernel: gather pages into the dense layout, then
@@ -46,3 +55,20 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, index,
     return decode_attention_ref(q, gather_pages(k_pages, page_table),
                                 gather_pages(v_pages, page_table),
                                 index, window=window)
+
+
+def paged_decode_attention_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                                     page_table, index,
+                                     window: int = GLOBAL_WINDOW):
+    """Oracle for the quantized paged kernel: gather the int8/fp8 pages AND
+    their per-page-per-head scales through the page table, dequantize to
+    fp32 (code * scale — the exact arithmetic the kernel does inside its
+    VMEM tile), then run the dense oracle. q [B,N,h]; pages
+    [num_pages, page_size, K, h] int8/fp8; scales [num_pages, K] f32;
+    page_table [B, npg]; index scalar or [B]."""
+    ps = k_pages.shape[1]
+    kd = gather_pages(k_pages, page_table).astype(jnp.float32) \
+        * gather_scales(k_scales, page_table, ps)
+    vd = gather_pages(v_pages, page_table).astype(jnp.float32) \
+        * gather_scales(v_scales, page_table, ps)
+    return decode_attention_ref(q, kd, vd, index, window=window)

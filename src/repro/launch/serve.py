@@ -42,6 +42,12 @@ def main(argv=None):
                    help="tokens per KV page (paged mode)")
     p.add_argument("--num-pages", type=int, default=0,
                    help="pool capacity in pages (0 = worst-case sizing)")
+    p.add_argument("--kv-dtype", default="bf16",
+                   choices=["bf16", "int8", "fp8"],
+                   help="paged KV pool storage: bf16 keeps the engine cache "
+                        "dtype; int8/fp8 store 1-byte codes with per-page "
+                        "scales, shrinking cache_bytes_hwm and decode HBM "
+                        "traffic (requires --paged)")
     p.add_argument("--pallas", action="store_true",
                    help="route decode through the flash-decode Pallas "
                         "kernels (dense or paged per --paged); on CPU they "
@@ -60,7 +66,8 @@ def main(argv=None):
                         fused=not args.reference,
                         tick_tokens=args.tick_tokens,
                         paged=args.paged, page_size=args.page_size,
-                        num_pages=args.num_pages or None)
+                        num_pages=args.num_pages or None,
+                        kv_dtype=args.kv_dtype)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -80,6 +87,7 @@ def main(argv=None):
           f"({'fused' if not args.reference else 'reference'} path)")
     if args.paged:
         print(f"[serve] paged KV: page_size={args.page_size} "
+              f"kv_dtype={args.kv_dtype} "
               f"pages_hwm={st.pages_hwm} "
               f"cache_bytes_hwm={st.cache_bytes_hwm} "
               f"prefix_hits={st.prefix_hits}")

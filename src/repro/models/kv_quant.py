@@ -1,0 +1,97 @@
+"""Quantized KV page format: int8 / fp8 pool leaves with per-page scales.
+
+The paged KV pool (``stacks.cache_template(paged=True)``) is the natural
+quantization boundary for the paper's memory-bound action-generation phase:
+decode streams the whole live KV cache per token, so storing pages at 1 byte
+per element halves-to-quarters both ``cache_bytes_hwm`` and the bytes the
+paged flash-decode kernel must move HBM->VMEM.
+
+Format
+------
+- ``kv_dtype`` names the pool storage: ``"bf16"`` (unquantized — pages keep
+  the cache dtype the caller picks, f32 in the serving engine so the
+  paged-vs-dense bit-equality oracle holds), ``"int8"`` (symmetric, codes in
+  [-127, 127]) or ``"fp8"`` (``float8_e4m3fn``, max 448).
+- Every quantized K/V pool leaf ``[num_pages, page_size, K, h]`` gets a
+  sibling scale leaf ``[num_pages, K]`` float32 (per-page, per-KV-head):
+  one scale covers all ``page_size * h`` elements a (page, head) pair holds.
+  A stored code ``c`` represents the value ``c * scale[page, head]``.
+- Scales are **amax-derived**: ``scale = max(|x|) / qmax`` over the covered
+  elements. On prefill scatter the amax spans the whole page; on decode the
+  scale grows monotonically — writing a token whose amax exceeds the page's
+  current range requantizes the already-stored codes under the new scale
+  (``decode -> insert -> encode``, drift-free while the scale is unchanged
+  because ``encode(decode(c)) == c`` exactly at a fixed scale).
+- All-zero pages carry scale 0; ``encode`` guards the division so they
+  produce code 0, and 0-codes dequantize to exactly 0 (unwritten rows of a
+  partially-filled page never contribute garbage).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+KV_DTYPES = ("bf16", "int8", "fp8")
+
+# smallest representable scale guard: avoids 0/0 on all-zero pages while
+# keeping every real amax (>= ~1e-30 is far below KV magnitudes) intact
+EPS = 1e-30
+
+
+def quant_dtype(kv_dtype: str) -> Optional[jnp.dtype]:
+    """Pool storage dtype for a ``kv_dtype`` name; None means unquantized."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8":
+        return jnp.float8_e4m3fn
+    return None
+
+
+def is_quantized(dtype) -> bool:
+    """Whether a concrete array dtype is a quantized pool storage dtype."""
+    return jnp.dtype(dtype) in (jnp.dtype(jnp.int8),
+                                jnp.dtype(jnp.float8_e4m3fn))
+
+
+def qmax(dtype) -> float:
+    """Largest code magnitude representable by a storage dtype (symmetric
+    range: int8 uses [-127, 127], fp8 e4m3fn saturates at 448)."""
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        return 127.0
+    if jnp.dtype(dtype) == jnp.dtype(jnp.float8_e4m3fn):
+        return float(jnp.finfo(jnp.float8_e4m3fn).max)
+    raise ValueError(f"not a quantized KV dtype: {dtype}")
+
+
+def amax_scale(rows, dtype):
+    """Per-(page, head) amax scale for page rows ``[..., ps, K, h]`` ->
+    ``[..., K]`` float32 (reduced over the token and head-dim axes)."""
+    a = jnp.max(jnp.abs(rows.astype(jnp.float32)), axis=(-3, -1))
+    return a / qmax(dtype)
+
+
+def encode(x, scale, dtype):
+    """Quantize fp values ``x`` to codes under ``scale`` (broadcastable).
+    int8 rounds-to-nearest and clips to [-127, 127]; fp8 casts (saturating).
+    ``scale == 0`` (all-zero page) yields code 0."""
+    y = x.astype(jnp.float32) / jnp.maximum(scale, EPS)
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        return jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+    return y.astype(dtype)
+
+
+def decode(codes, scale):
+    """Dequantize codes back to float32 under ``scale`` (broadcastable)."""
+    return codes.astype(jnp.float32) * scale
+
+
+def quantize_page_rows(rows, dtype):
+    """Quantize dense page rows ``[..., ps, K, h]`` in one shot.
+    Returns ``(codes, scales)`` with scales ``[..., K]`` — the layout the
+    pool's sibling scale leaves store and the paged decode kernel reads."""
+    scales = amax_scale(rows, dtype)
+    return encode(rows, scales[..., None, :, None], dtype), scales

@@ -332,41 +332,96 @@ def update_cache(cache, new, index):
             c, n.astype(c.dtype), i, 0))(cache, new, idx)
 
 
-def update_cache_paged(pages, new, page_table, index):
-    """Write the decode token's KV into the page pool.
+def update_cache_paged(pages, new, page_table, index, scales=None):
+    """Write the decode token's KV into the page pool; quantize on write
+    when the pool is quantized. Returns ``(pages, scales)`` (scales is None
+    for unquantized pools).
 
     pages [num_pages, page_size, K, h]; new [B,1,K,h]; page_table [B,npg]
-    int32; index scalar or per-slot [B] vector. Logical position ``i`` of
-    slot ``b`` lives at (page_table[b, i // page_size], i % page_size).
-    Distinct live slots always own distinct write pages, so the scatter has
-    no cross-slot collisions (retired slots' table rows point at the
-    reserved null page 0, a write sink that is never read unmasked)."""
+    int32; index scalar or per-slot [B] vector; scales [num_pages, K]
+    float32 (quantized pools only). Logical position ``i`` of slot ``b``
+    lives at (page_table[b, i // page_size], i % page_size). Distinct live
+    slots always own distinct write pages, so the scatter has no cross-slot
+    collisions (retired slots' table rows point at the reserved null page 0,
+    a write sink that is never read unmasked).
+
+    Quantized write (monotone amax policy, see models.kv_quant): the touched
+    page's scale grows to cover the new token's amax; since one scale covers
+    the whole (page, head), a grown scale requantizes the page's existing
+    codes (dequant under the old scale -> insert the token -> encode under
+    the new). ``encode(decode(c)) == c`` exactly at a fixed scale, so
+    repeated writes at a stable scale are drift-free — and the common case
+    (no slot's scale grew this step) therefore skips the page round-trip
+    entirely via ``lax.cond``: it encodes just the token row under the
+    existing scale, bit-identical to what the requantizing branch would
+    produce. Retired slots (table row all null page 0) keep the null page's
+    documented all-zero state: their token codes and scale updates are
+    masked to zero, so page 0 always dequantizes to exactly 0."""
     ps = pages.shape[1]
     B = new.shape[0]
     idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
     pid = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
-    return pages.at[pid, idx % ps].set(new[:, 0].astype(pages.dtype))
+    if scales is None:
+        return pages.at[pid, idx % ps].set(new[:, 0].astype(pages.dtype)), None
+    from repro.models import kv_quant
+    tok = new[:, 0].astype(jnp.float32)                       # [B,K,h]
+    sink = (pid == 0)                                         # retired slot
+    old_scale = scales[pid]                                   # [B,K]
+    tok_scale = jnp.max(jnp.abs(tok), -1) / kv_quant.qmax(pages.dtype)
+    new_scale = jnp.where(sink[:, None], old_scale,
+                          jnp.maximum(old_scale, tok_scale))  # monotone
+    tok = jnp.where(sink[:, None, None], 0.0, tok)            # sink stays 0
+
+    def rescale(pages, scales):
+        # some page's range grew: dequant -> insert token -> requant
+        page_f = kv_quant.decode(pages[pid], old_scale[:, None, :, None])
+        page_f = jax.vmap(
+            lambda pg, t, r: jax.lax.dynamic_update_slice_in_dim(
+                pg, t[None], r, 0))(page_f, tok, idx % ps)    # [B,ps,K,h]
+        codes = kv_quant.encode(page_f, new_scale[:, None, :, None],
+                                pages.dtype)
+        return pages.at[pid].set(codes), scales.at[pid].set(new_scale)
+
+    def row_only(pages, scales):
+        # every scale unchanged: single-row write, no page round-trip
+        codes = kv_quant.encode(tok, old_scale[:, :, None], pages.dtype)
+        return pages.at[pid, idx % ps].set(codes), scales
+
+    return jax.lax.cond(jnp.any(new_scale > old_scale), rescale, row_only,
+                        pages, scales)
 
 
 def attention_decode_paged(q, k_pages, v_pages, page_table, index,
-                           window: int, opts: Optional[ModelOptions] = None):
+                           window: int, opts: Optional[ModelOptions] = None,
+                           k_scales=None, v_scales=None):
     """Single-token decode against a paged KV pool. q [B,1,N,h]; pages
-    [num_pages, page_size, K, h]; page_table [B,npg]; index scalar or [B].
+    [num_pages, page_size, K, h]; page_table [B,npg]; index scalar or [B];
+    k/v_scales [num_pages, K] float32 for quantized pools (None otherwise).
 
     With ``opts.use_pallas`` the per-slot paged flash-decode kernel gathers
-    KV blocks through the page table inside the kernel (scalar-prefetched
-    index map). The fallback materializes the dense gather and reuses
-    ``attention_decode`` — bit-identical to the dense layout, which is what
-    the paged-vs-dense equivalence gates rely on."""
+    KV blocks (and their scales) through the page table inside the kernel
+    (scalar-prefetched index map) and dequantizes inside the VMEM tile. The
+    fallback materializes the dense gather (dequantized, for quantized
+    pools) and reuses ``attention_decode`` — bit-identical to the dense
+    layout in the unquantized case, which is what the paged-vs-dense
+    equivalence gates rely on."""
     if opts is not None and opts.use_pallas:
         from repro.kernels.decode_attention import ops as da_ops
         out = da_ops.paged_decode_attention(q[:, 0], k_pages, v_pages,
-                                            page_table, index, window=window,
+                                            page_table, index,
+                                            k_scales=k_scales,
+                                            v_scales=v_scales, window=window,
                                             interpret=opts.pallas_interpret)
         return out[:, None]
-    from repro.kernels.decode_attention.ref import gather_pages
-    return attention_decode(q, gather_pages(k_pages, page_table),
-                            gather_pages(v_pages, page_table), index, window)
+    from repro.kernels.decode_attention.ref import gather_pages, gather_scales
+    kd = gather_pages(k_pages, page_table)
+    vd = gather_pages(v_pages, page_table)
+    if k_scales is not None:
+        kd = kd.astype(jnp.float32) * gather_scales(k_scales, page_table,
+                                                    k_pages.shape[1])
+        vd = vd.astype(jnp.float32) * gather_scales(v_scales, page_table,
+                                                    v_pages.shape[1])
+    return attention_decode(q, kd, vd, index, window)
 
 
 def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
@@ -405,16 +460,23 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
     if cache is not None and not pre:
         if page_table is not None:
             # paged layout: cache leaves are shared pools, positions resolve
-            # through the per-slot page table (decode only)
+            # through the per-slot page table (decode only); a 4-tuple cache
+            # carries per-page quantization scales (see models.kv_quant)
             if S != 1:
                 raise ValueError("paged caches support single-token decode; "
                                  "prefill runs dense and is scattered into "
                                  "pages by the serving engine")
-            k_cache = update_cache_paged(cache[0], k, page_table, cache_index)
-            v_cache = update_cache_paged(cache[1], v, page_table, cache_index)
+            k_sc, v_sc = cache[2:] if len(cache) == 4 else (None, None)
+            k_cache, k_sc = update_cache_paged(cache[0], k, page_table,
+                                               cache_index, k_sc)
+            v_cache, v_sc = update_cache_paged(cache[1], v, page_table,
+                                               cache_index, v_sc)
             new_cache = (k_cache, v_cache)
+            if k_sc is not None:
+                new_cache += (k_sc, v_sc)
             out = attention_decode_paged(q, k_cache, v_cache, page_table,
-                                         cache_index, window, opts)
+                                         cache_index, window, opts,
+                                         k_scales=k_sc, v_scales=v_sc)
         else:
             smax = cache[0].shape[1]
             ring = (window != GLOBAL_WINDOW and smax == window)

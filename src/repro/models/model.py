@@ -141,7 +141,11 @@ def decode_step(cfg: ModelConfig, opts: ModelOptions, params, token,
     per-slot [B] vector (continuous batching). ``page_table`` [B,npg]
     selects the paged cache layout: attention cache leaves are shared
     ``[num_pages, page_size, K, h]`` pools and positions resolve through the
-    table (see serving.kv_pool); dense per-slot caches when None.
+    table (see serving.kv_pool); dense per-slot caches when None. A
+    quantized pool (caches built with ``init_caches(kv_dtype="int8"/"fp8")``)
+    needs no extra arguments — the int8/fp8 value leaves and their
+    ``k_scale``/``v_scale`` siblings ride the cache pytree, and the
+    attention layer de/requantizes from their presence alone.
     Returns (logits [B,1,V], new caches)."""
     B = token.shape[0]
     idx = jnp.asarray(index, jnp.int32)
@@ -165,7 +169,9 @@ def decode_loop(cfg: ModelConfig, opts: ModelOptions, params, token, caches,
     batching); advanced by 1 every step. ``sample_fn`` maps logits [B,1,V]
     -> tokens [B] (greedy when None). ``page_table`` as in ``decode_step``
     (the table is constant across the fused steps; callers pre-allocate
-    pages covering index + n_steps).
+    pages covering index + n_steps). Quantized paged caches scan through
+    unchanged — the int8/fp8 codes and scale leaves are ordinary carry
+    state, and the per-step quantize-on-write keeps their dtypes fixed.
     Returns (tokens [B, n_steps], last_token [B,1], caches)."""
     idx = jnp.asarray(index, jnp.int32)
 

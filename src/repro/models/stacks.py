@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs.base import GLOBAL_WINDOW, ModelConfig, VisionConfig
 from repro.distributed.sharding import constrain
+from repro.models import kv_quant
 from repro.models import layers as L
 from repro.models.params import PSpec, stack
 
@@ -201,12 +202,18 @@ def apply_sublayer(p, x, cfg: ModelConfig, opts: L.ModelOptions, kind: SubKind,
     if kind.mixer == "attn":
         attn_cache = None
         if cache is not None and "k" in cache:
+            # quantized paged caches carry per-page scale siblings; the
+            # 4-tuple form tells layers.attention to de/requantize
             attn_cache = (cache["k"], cache["v"])
+            if "k_scale" in cache:
+                attn_cache += (cache["k_scale"], cache["v_scale"])
         a, attn_cache = L.attention(p, h, cfg, opts, kind.window, positions,
                                     cache=attn_cache, cache_index=cache_index,
                                     page_table=page_table)
         if attn_cache is not None:
-            new_cache["k"], new_cache["v"] = attn_cache
+            new_cache["k"], new_cache["v"] = attn_cache[:2]
+            if len(attn_cache) == 4:
+                new_cache["k_scale"], new_cache["v_scale"] = attn_cache[2:]
         x = x + a
         if kind.cross:
             hc = L.apply_norm(p, x, cfg, "ln_cross")
@@ -348,7 +355,7 @@ def apply_tower(params, embeds, enc: VisionConfig, opts: L.ModelOptions):
 def cache_template(cfg: ModelConfig, batch: int, max_seq: int,
                    dtype=jnp.bfloat16, opts: Optional[L.ModelOptions] = None,
                    *, paged: bool = False, num_pages: int = 0,
-                   page_size: int = 0):
+                   page_size: int = 0, kv_dtype: str = "bf16"):
     """Shape tree (PSpec) for the decode cache; concrete zeros via init_caches.
 
     Dense (default): attention K/V leaves are per-slot ``[batch, seq, K, h]``
@@ -356,16 +363,25 @@ def cache_template(cfg: ModelConfig, batch: int, max_seq: int,
     shared pools ``[num_pages, page_size, K, h]`` addressed through a
     per-slot page table (see serving.kv_pool); only attention k/v move to
     the pool — SSM/conv state and cross-attention K/V keep the slot-batched
-    layout (they are O(1) or prompt-sized per slot, not decode-growing)."""
+    layout (they are O(1) or prompt-sized per slot, not decode-growing).
+
+    ``kv_dtype`` (paged only) selects the pool storage: ``"bf16"`` keeps
+    ``dtype``; ``"int8"``/``"fp8"`` store 1-byte codes and every K/V pool
+    leaf gets a sibling per-page-per-head float32 scale leaf
+    (``k_scale``/``v_scale`` ``[num_pages, K]`` — see models.kv_quant)."""
     period, nblocks, ntail = stack_plan(cfg)
     kinds = sub_kinds(cfg)
     opts = opts or L.ModelOptions()
+    quantized = kv_quant.quant_dtype(kv_dtype) is not None
     if paged:
         if num_pages <= 0 or page_size <= 0:
             raise ValueError("paged cache_template needs num_pages/page_size")
         if opts.window_cache:
             raise ValueError("window_cache (per-layer ring buffers) and the "
                              "paged KV pool are mutually exclusive")
+    elif quantized:
+        raise ValueError("kv_dtype quantization requires the paged layout "
+                         "(the page pool is the quantization boundary)")
 
     def sub_cache(kind: SubKind):
         c: Dict[str, PSpec] = {}
@@ -377,6 +393,11 @@ def cache_template(cfg: ModelConfig, batch: int, max_seq: int,
                 c["v"] = PSpec((num_pages, page_size, cfg.num_kv_heads,
                                 cfg.head_dim),
                                (None, None, "act_kv_heads", None))
+                if quantized:
+                    c["k_scale"] = PSpec((num_pages, cfg.num_kv_heads),
+                                         (None, "act_kv_heads"))
+                    c["v_scale"] = PSpec((num_pages, cfg.num_kv_heads),
+                                         (None, "act_kv_heads"))
                 if kind.cross and cfg.encoder:
                     c["xk"] = PSpec((batch, cfg.encoder.num_tokens,
                                      cfg.num_kv_heads, cfg.head_dim),
@@ -425,24 +446,45 @@ def cache_batch_axis(path) -> int:
     return 1 if key == "blocks" else 0
 
 
-def cache_dtype(path_key: str, dtype):
-    # SSM recurrent state is kept fp32 (it integrates over the whole stream).
-    return jnp.float32 if path_key == "ssm" else dtype
+def cache_dtype(path_key: str, dtype, kv_dtype: str = "bf16"):
+    # SSM recurrent state is kept fp32 (it integrates over the whole stream);
+    # quantization scales are fp32 metadata; quantized K/V pool leaves store
+    # 1-byte codes (see models.kv_quant).
+    if path_key == "ssm":
+        return jnp.float32
+    if path_key in ("k_scale", "v_scale"):
+        return jnp.float32
+    q = kv_quant.quant_dtype(kv_dtype)
+    if q is not None and path_key in ("k", "v"):
+        return q
+    return dtype
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
                 dtype=jnp.bfloat16, opts=None, *, paged: bool = False,
-                num_pages: int = 0, page_size: int = 0):
+                num_pages: int = 0, page_size: int = 0,
+                kv_dtype: str = "bf16"):
     t = cache_template(cfg, batch, max_seq, dtype, opts, paged=paged,
-                       num_pages=num_pages, page_size=page_size)
+                       num_pages=num_pages, page_size=page_size,
+                       kv_dtype=kv_dtype)
     return jax.tree_util.tree_map_with_path(
-        lambda path, s: jnp.zeros(s.shape, cache_dtype(path[-1].key, dtype)),
+        lambda path, s: jnp.zeros(s.shape, cache_dtype(path[-1].key, dtype,
+                                                       kv_dtype)),
         t, is_leaf=lambda x: isinstance(x, PSpec))
 
 
 def is_paged_leaf(path) -> bool:
-    """Whether a cache-pytree leaf lives in the paged KV pool (attention
-    ``k``/``v``) rather than the slot-batched layout (``xk``/``xv``/``ssm``/
-    ``conv``). Only meaningful for caches built with ``paged=True``."""
+    """Whether a cache-pytree leaf lives in the paged KV pool layout —
+    attention ``k``/``v`` value leaves and their ``k_scale``/``v_scale``
+    quantization-scale siblings (leading axis = num_pages) — rather than the
+    slot-batched layout (``xk``/``xv``/``ssm``/``conv``, leading axis =
+    batch). Only meaningful for caches built with ``paged=True``."""
     key = getattr(path[-1], "key", path[-1])
-    return key in ("k", "v")
+    return key in ("k", "v", "k_scale", "v_scale")
+
+
+def is_scale_leaf(path) -> bool:
+    """Whether a cache-pytree leaf is a quantization scale sibling
+    (``[num_pages, K]`` float32) of a paged K/V pool leaf."""
+    key = getattr(path[-1], "key", path[-1])
+    return key in ("k_scale", "v_scale")

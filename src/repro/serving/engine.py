@@ -31,7 +31,11 @@ Two cache layouts (``paged=``):
   scatters prefill KV page-wise; finish frees pages back to the pool. Cache
   memory scales with pages actually used, not ``max_seq`` per slot, and
   ``EngineStats`` tracks pages-in-use / cache-bytes high-water / prefix
-  hits.
+  hits. ``kv_dtype="int8"``/``"fp8"`` stores the pools as 1-byte codes
+  with per-page-per-head f32 scale siblings (quantize on scatter and on
+  decode write, dequantize in the decode read — see models.kv_quant and
+  docs/kv-cache.md), shrinking cache bytes and decode HBM traffic to
+  ~0.52x the bf16-equivalent at int8.
 
 Phase latency accounting (vision / prefill / decode) is recorded per request
 and aggregated in ``EngineStats`` — the serving-side counterpart of the
@@ -53,9 +57,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import kv_quant
 from repro.models import model as M
 from repro.models.layers import ModelOptions
-from repro.models.stacks import cache_batch_axis, is_paged_leaf
+from repro.models.stacks import cache_batch_axis, is_paged_leaf, is_scale_leaf
 from repro.serving import sampler as S
 from repro.serving.kv_pool import KVPool, PoolExhausted
 
@@ -86,8 +91,10 @@ class EngineStats:
     The cache fields are live only on the paged engine: ``pages_in_use`` /
     ``pages_hwm`` count pool pages referenced by live slots,
     ``cache_bytes_hwm`` is the high-water of their device bytes (summed over
-    every attention layer's K+V pools), and ``prefix_hits`` counts pages
-    served from the prefix cache instead of being re-stored.
+    every attention layer's K+V pools *at the pool's storage dtype* — a
+    quantized engine's figure reflects the 1-byte codes plus their f32
+    scale rows, not the bf16/f32 equivalent), and ``prefix_hits`` counts
+    pages served from the prefix cache instead of being re-stored.
     """
     decode_syncs: int = 0       # blocking readbacks on the decode path
     prefill_syncs: int = 0      # blocking readbacks at admission
@@ -191,9 +198,13 @@ class ServingEngine:
                  tick_tokens: int = 8, temperature: float = 0.0,
                  top_k: int = 0, seed: int = 0, stop_on_finish: bool = True,
                  paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None, prefix_cache: bool = True):
+                 num_pages: Optional[int] = None, prefix_cache: bool = True,
+                 kv_dtype: str = "bf16"):
         if tick_tokens < 1:
             raise ValueError(f"tick_tokens must be >= 1, got {tick_tokens}")
+        if kv_quant.quant_dtype(kv_dtype) is not None and not paged:
+            raise ValueError("kv_dtype quantization requires paged=True "
+                             "(the page pool is the quantization boundary)")
         self.cfg, self.opts, self.params = cfg, opts, params
         self.n_slots, self.max_seq, self.eos = n_slots, max_seq, eos
         self.prompt_len = prompt_len
@@ -206,6 +217,7 @@ class ServingEngine:
         self.budget = np.zeros(n_slots, np.int32)
         self.tokens = np.zeros((n_slots, 1), np.int32)
         self.paged, self.page_size = paged, page_size
+        self.kv_dtype = kv_dtype
         self.prefix_cache = prefix_cache
         self.pool: Optional[KVPool] = None
         if paged:
@@ -219,7 +231,8 @@ class ServingEngine:
             self.pool = KVPool(num_pages, page_size, n_slots, pages_per_slot)
             self.caches = M.init_caches(cfg, n_slots, max_seq, jnp.float32,
                                         opts, paged=True, num_pages=num_pages,
-                                        page_size=page_size)
+                                        page_size=page_size,
+                                        kv_dtype=kv_dtype)
             self._bytes_per_page = sum(
                 leaf.nbytes // num_pages for path, leaf in
                 jax.tree_util.tree_leaves_with_path(self.caches)
@@ -261,10 +274,14 @@ class ServingEngine:
         """Prefix-closed digests, one per *full* page of the prompt prefix.
         Key i covers every input that determines KV for positions
         [0, (i+1)*page_size): the vision patches (one digest, repeated over
-        the prefix positions they fill) and the prompt tokens so far."""
+        the prefix positions they fill) and the prompt tokens so far. The
+        seed also covers the pool storage dtype, so a bf16 pool and an
+        int8/fp8 pool can never share pages (their page contents differ
+        bit-for-bit even for identical prompts)."""
         if not self.prefix_cache:
             return []
-        h = hashlib.sha1(f"{self.cfg.name}:{self.page_size}".encode())
+        h = hashlib.sha1(
+            f"{self.cfg.name}:{self.page_size}:{self.kv_dtype}".encode())
         items: List[bytes] = []
         if n_prefix:
             pd = hashlib.sha1(
@@ -311,11 +328,20 @@ class ServingEngine:
         Pool pressure degrades instead of crashing: if growth fails, the
         live slot holding the most pages (excluding the one being grown) is
         preempted and retried later; a single request the pool cannot hold
-        at all is a sizing error and raises."""
+        at all is a sizing error and raises.
+
+        Quantized pools: pages handed out by growth may have been freed by
+        an earlier request and still carry its scale rows; those rows are
+        zeroed on device before the tick, so the monotone-amax write policy
+        starts from a clean scale and quantization stays history-independent
+        (the admission path needs no reset — ``_scatter_pages`` overwrites
+        scale rows wholesale)."""
         copies = []
+        held_before: Dict[int, set] = {}
         for s in range(self.n_slots):
             if self.slots[s] is None:
                 continue
+            held_before[s] = set(self.pool.slot_pages[s])
             start = int(self.index[s])
             # never reserve past the slot's remaining budget — backing pages
             # a finishing slot cannot write could preempt a healthy one
@@ -336,8 +362,22 @@ class ServingEngine:
                     self._preempt_slot(max(
                         victims, key=lambda v: len(self.pool.slot_pages[v])))
             self.slots[s].pages_used = len(self.pool.slot_pages[s])
+        width = self.pool.pages_per_slot * self.n_slots
+        if kv_quant.quant_dtype(self.kv_dtype) is not None:
+            # pages a slot gained this call (growth and COW destinations;
+            # diffed against entry so pages appended by an ensure() that
+            # then raised are included too). Zero their scale rows *before*
+            # the COW copy below, which restores the destinations' scales.
+            fresh = sorted({p for s, held in held_before.items()
+                            if self.slots[s] is not None
+                            for p in self.pool.slot_pages[s]
+                            if p not in held})
+            if fresh:
+                ids = np.zeros(width, np.int32)   # 0-pads hit the null page
+                ids[:len(fresh)] = fresh
+                self.caches = _reset_page_scales(self.caches,
+                                                 jnp.asarray(ids))
         if copies:
-            width = self.pool.pages_per_slot * self.n_slots
             src = np.zeros(width, np.int32)
             dst = np.zeros(width, np.int32)
             for i, (a, b) in enumerate(copies):   # null->null pads are no-ops
@@ -542,45 +582,108 @@ class ServingEngine:
         return self.finished
 
 
+def _path_keys(path):
+    """Pytree path -> hashable tuple of dict keys (for cross-tree lookups:
+    a quantized paged cache has scale leaves the dense prefill cache lacks,
+    so the two trees cannot be tree_map'd jointly)."""
+    return tuple(getattr(p, "key", p) for p in path)
+
+
 def _scatter_slot(caches, cache1, slot: int, skip_paged: bool = False):
     """Copy a batch-1 prefill cache into slot `slot` of the slot caches.
     The batch axis of every leaf comes from the cache pytree's explicit
     annotation (stacks.cache_batch_axis): block caches are layer-stacked, so
     batch sits at axis 1; tail caches carry it at axis 0. With
-    ``skip_paged`` the attention k/v leaves are left untouched (they live in
-    the page pool and are filled by ``_scatter_pages``)."""
-    def scatter(path, big, small):
+    ``skip_paged`` the pool-layout leaves (attention k/v and their scale
+    siblings) are left untouched — they are filled by ``_scatter_pages``.
+    Leaves are matched across the two trees by path key, because the
+    quantized slot cache carries scale leaves the dense prefill cache
+    doesn't have."""
+    flat1 = {_path_keys(p): leaf for p, leaf
+             in jax.tree_util.tree_leaves_with_path(cache1)}
+
+    def scatter(path, big):
         if skip_paged and is_paged_leaf(path):
             return big
+        small = flat1[_path_keys(path)]
         axis = cache_batch_axis(path)
         assert small.shape[axis] == 1, (path, small.shape, axis)
         idx = [slice(None)] * big.ndim
         idx[axis] = slice(slot, slot + 1)
         return big.at[tuple(idx)].set(small.astype(big.dtype))
-    return jax.tree_util.tree_map_with_path(scatter, caches, cache1)
+    return jax.tree_util.tree_map_with_path(scatter, caches)
 
 
 @functools.partial(jax.jit, static_argnames=("page_size",), donate_argnums=0)
 def _scatter_pages(caches, cache1, dest_pages, page_size: int):
-    """Scatter a batch-1 dense prefill cache into pool pages.
+    """Scatter a batch-1 dense prefill cache into pool pages, quantizing on
+    the way in when the pool stores int8/fp8 codes.
 
     ``dest_pages`` [pages_per_slot] int32 holds the physical destination for
     each prompt page; entries routed to 0 (the null page) are write sinks —
     used both for prefix-shared pages (already holding identical KV) and for
-    pages past the slot's allocation."""
-    def scatter(path, big, small):
-        if not is_paged_leaf(path):
-            return big
-        ax = cache_batch_axis(path)   # batch axis of the dense prefill leaf
-        if ax == 1:                   # blocks: [nb, 1, S, K, h]
+    pages past the slot's allocation.
+
+    Quantized pools: each prompt page's scale is its amax over the page
+    (per KV head) / qmax — computed from the fp32 prefill KV, written to the
+    sibling ``k_scale``/``v_scale`` leaf for the same destination pages, and
+    used to encode the value rows. Decode writes into the tail page later
+    grow that scale monotonically (see layers.update_cache_paged)."""
+    flat_big, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    big_by_key = {_path_keys(p): leaf for p, leaf in flat_big}
+    flat1 = {_path_keys(p): leaf for p, leaf
+             in jax.tree_util.tree_leaves_with_path(cache1)}
+
+    def page_rows(keys, stacked):
+        """Dense prefill leaf -> page-major rows [(nb,) P, ps, K, h]."""
+        small = flat1[keys]
+        if stacked:                   # blocks: [nb, 1, S, K, h]
             nb, _, seq = small.shape[:3]
-            rows = small.reshape(nb, seq // page_size, page_size,
+            return small.reshape(nb, seq // page_size, page_size,
                                  *small.shape[3:])
-            return big.at[:, dest_pages].set(rows.astype(big.dtype))
-        _, seq = small.shape[:2]      # tail: [1, S, K, h]
-        rows = small.reshape(seq // page_size, page_size, *small.shape[2:])
-        return big.at[dest_pages].set(rows.astype(big.dtype))
-    return jax.tree_util.tree_map_with_path(scatter, caches, cache1)
+        seq = small.shape[1]          # tail: [1, S, K, h]
+        return small.reshape(seq // page_size, page_size, *small.shape[2:])
+
+    out = []
+    for path, big in flat_big:
+        if not is_paged_leaf(path):
+            out.append(big)
+            continue
+        keys = _path_keys(path)
+        stacked = cache_batch_axis(path) == 1
+        # scale and value leaves both derive from one quantize_page_rows
+        # call on the same dense rows (XLA CSEs the duplicate), so the
+        # stored scales can never diverge from the scales the codes were
+        # encoded under
+        if is_scale_leaf(path):
+            vkey = keys[:-1] + ("k" if keys[-1] == "k_scale" else "v",)
+            _, scale = kv_quant.quantize_page_rows(page_rows(vkey, stacked),
+                                                   big_by_key[vkey].dtype)
+            out.append(big.at[:, dest_pages].set(scale) if stacked
+                       else big.at[dest_pages].set(scale))
+            continue
+        rows = page_rows(keys, stacked)
+        if kv_quant.is_quantized(big.dtype):
+            rows, _ = kv_quant.quantize_page_rows(rows, big.dtype)
+        out.append(big.at[:, dest_pages].set(rows.astype(big.dtype))
+                   if stacked else
+                   big.at[dest_pages].set(rows.astype(big.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _reset_page_scales(caches, page_ids):
+    """Zero the quantization-scale rows of ``page_ids`` (padded with 0 — the
+    null page, harmless to reset). Run on pages entering a slot via decode
+    growth, whose previous owner's scale rows would otherwise leak into the
+    monotone-amax write policy and make quantization history-dependent."""
+    def reset(path, big):
+        if not is_scale_leaf(path):
+            return big
+        if cache_batch_axis(path) == 1:   # blocks: [nb, P, K]
+            return big.at[:, page_ids].set(0.0)
+        return big.at[page_ids].set(0.0)
+    return jax.tree_util.tree_map_with_path(reset, caches)
 
 
 @functools.partial(jax.jit, donate_argnums=0)

@@ -31,6 +31,13 @@ Design points (vLLM's block allocator, re-expressed for fixed-shape XLA):
   still hits even after the first request finished. Retained pages are
   reclaimed on demand, oldest first, when the free list runs dry — cache
   capacity costs nothing until there is real allocation pressure.
+
+The pool never touches device memory: quantized pools' per-page scale
+arrays (see ``models.kv_quant``) are cache-pytree leaves indexed by the
+same physical page ids this class hands out, so every engine-side page
+operation (scatter, COW copy, reuse-after-free) moves scales in lockstep
+with values without the allocator knowing quantization exists. Format and
+dataflow docs: docs/kv-cache.md, docs/architecture.md.
 """
 from __future__ import annotations
 
@@ -52,6 +59,26 @@ class KVPool:
     num_pages: total physical pages, *including* the reserved null page 0.
     page_size: tokens per page.
     n_slots / pages_per_slot: shape of the page table handed to the device.
+
+    Invariants (every public method preserves all of them):
+
+    - ``page_table`` is ``[n_slots, pages_per_slot]`` int32; row ``b``
+      holds ``slot_pages[b]`` left-justified, padded with the null page 0.
+      Logical position ``i`` of slot ``b`` lives at
+      ``(page_table[b, i // page_size], i % page_size)``.
+    - Page 0 is never allocated, never freed, never hashed; ``refcount[0]``
+      is pinned at 1. Every table entry that does not name a live page
+      names page 0 (the device-side write sink).
+    - ``refcount[p] > 0`` iff some slot's page list (or a mid-call
+      transaction) references ``p``; refcount 0 means ``p`` is on the free
+      list, or — if it still carries a prefix hash — in the retained LRU.
+    - Prefix digests are *prefix-closed* (key ``i`` covers all positions up
+      to page ``i``'s end), so ``admit`` may share exactly a leading run of
+      hit pages; ``_hash_to_page`` only ever points at pages whose KV has
+      actually been written (rollback drops registrations of fresh pages).
+    - Mutating methods are atomic under ``PoolExhausted``: ``admit`` and
+      ``prepare_write`` roll back partial work before raising, so the
+      caller observes either the full transition or none of it.
     """
 
     def __init__(self, num_pages: int, page_size: int, n_slots: int,
@@ -86,9 +113,12 @@ class KVPool:
         return len(self._cached)
 
     def num_pages_for(self, length: int) -> int:
+        """Pages needed to cover ``length`` positions (ceil division)."""
         return -(-length // self.page_size)
 
     def slot_len_capacity(self, slot: int) -> int:
+        """Positions the slot's currently-held pages can store; decode past
+        this must ``ensure`` growth first or its write lands out of range."""
         return len(self.slot_pages[slot]) * self.page_size
 
     # -- allocation core ---------------------------------------------------
@@ -133,9 +163,12 @@ class KVPool:
     # -- slot lifecycle ----------------------------------------------------
     def can_admit(self, seq_len: int,
                   prefix_keys: Sequence[bytes] = ()) -> bool:
-        """Whether ``admit`` would succeed right now, without touching any
-        state. Lets the engine check capacity *before* paying for vision +
-        prefill on a request it would only have to defer."""
+        """Whether ``admit(slot, seq_len, prefix_keys)`` would succeed right
+        now, without touching any state. Lets the engine check capacity
+        *before* paying for vision + prefill on a request it would only have
+        to defer. Accounts for prefix pages that sit in the retained cache:
+        a hit revives such a page, so it is shared *and* no longer
+        reclaimable — counting it as both would overstate supply."""
         n_pages = self.num_pages_for(seq_len)
         if n_pages > self.pages_per_slot:
             return True     # let admit() raise the ValueError
@@ -204,7 +237,11 @@ class KVPool:
 
     def ensure(self, slot: int, length: int) -> List[int]:
         """Grow ``slot`` to cover ``length`` positions (capped at slot
-        capacity). Returns the freshly allocated page ids."""
+        capacity). Returns the freshly allocated page ids. Raises
+        ``PoolExhausted`` with the slot partially grown — already-appended
+        pages stay owned by the slot (they are valid growth, not a broken
+        transaction), so a retry after the caller frees pressure continues
+        where this call stopped."""
         length = min(length, self.pages_per_slot * self.page_size)
         fresh: List[int] = []
         while self.slot_len_capacity(slot) < length:
@@ -249,8 +286,10 @@ class KVPool:
         return copies
 
     def fork(self, src: int, dst: int):
-        """Share all of ``src``'s pages with ``dst`` (zero-copy; later
-        writes on either side trigger copy-on-write via prepare_write)."""
+        """Share all of ``src``'s pages with ``dst`` (zero-copy refcount
+        bumps; ``dst`` must be empty). Later writes on either side trigger
+        copy-on-write via ``prepare_write`` — the beam/speculative-decoding
+        entry point; the engine's own admit path never forks."""
         assert not self.slot_pages[dst], f"slot {dst} still holds pages"
         for pid in self.slot_pages[src]:
             self._incref(pid)

@@ -348,3 +348,266 @@ def test_paged_rejects_bad_geometry(opts):
     with pytest.raises(ValueError, match="must divide"):
         ServingEngine(cfg, opts, params, max_seq=50, paged=True,
                       page_size=16)
+
+
+# ---------------------------------------------------------------------------
+# quantized pool (int8/fp8 pages + per-page scale siblings)
+# ---------------------------------------------------------------------------
+
+def test_quantized_requires_paged(opts):
+    """kv_dtype quantization without the paged layout is a config error, at
+    both the template and the engine boundary."""
+    from repro.models import stacks
+    cfg, params = reduced_params("smollm-135m")
+    with pytest.raises(ValueError, match="requires the paged layout"):
+        stacks.cache_template(cfg, 1, 32, kv_dtype="int8")
+    with pytest.raises(ValueError, match="requires paged"):
+        ServingEngine(cfg, opts, params, max_seq=32, kv_dtype="int8")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        stacks.cache_template(cfg, 1, 32, paged=True, num_pages=4,
+                              page_size=8, kv_dtype="int4")
+
+
+def test_quantized_cache_leaves_and_dtypes(opts):
+    """Quantized paged caches carry int8/fp8 K/V pool leaves with f32
+    per-page-per-head scale siblings [num_pages, K]; bf16 mode has none."""
+    from repro.models import model as M
+    from repro.models.stacks import is_paged_leaf, is_scale_leaf
+    cfg, _ = reduced_params("smollm-135m")
+    for kv_dtype, want in (("int8", jnp.int8), ("fp8", jnp.float8_e4m3fn)):
+        caches = M.init_caches(cfg, 2, 32, jnp.float32, opts, paged=True,
+                               num_pages=6, page_size=8, kv_dtype=kv_dtype)
+        n_scale = n_val = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(caches):
+            if is_scale_leaf(path):
+                n_scale += 1
+                assert leaf.dtype == jnp.float32
+                assert leaf.shape[-2:] == (6, cfg.num_kv_heads) or \
+                    leaf.shape == (6, cfg.num_kv_heads)
+            elif is_paged_leaf(path):
+                n_val += 1
+                assert leaf.dtype == want, path
+        assert n_scale == n_val > 0
+    plain = M.init_caches(cfg, 2, 32, jnp.float32, opts, paged=True,
+                          num_pages=6, page_size=8)
+    assert not any(is_scale_leaf(p) for p, _ in
+                   jax.tree_util.tree_leaves_with_path(plain))
+
+
+def test_quantized_streams_match_bf16(opts):
+    """int8 greedy streams match the unquantized paged engine on both the
+    fused and per-token paths; the quantized pool is smaller and keeps its
+    prefix hits. (fp8 agreement is workload-dependent; gated in the bench.)"""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(21)
+    shared = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+    reqs = [(shared, 6),
+            (rng.integers(0, cfg.vocab_size, 9, dtype=np.int32), 7),
+            (shared, 5)]
+    ref, eng_ref = _streams(cfg, opts, params, reqs, paged=True)
+    for fused in (True, False):
+        out, eng = _streams(cfg, opts, params, reqs, paged=True, fused=fused,
+                            kv_dtype="int8")
+        assert out == ref, f"int8 (fused={fused}) diverged from bf16 paged"
+        assert eng.stats.prefix_hits == eng_ref.stats.prefix_hits
+        assert eng.stats.pages_hwm == eng_ref.stats.pages_hwm
+        assert eng.stats.cache_bytes_hwm < 0.3 * eng_ref.stats.cache_bytes_hwm
+        assert eng.stats.pages_in_use == 0
+
+
+def test_quantized_pool_exhaustion_and_preemption(opts):
+    """Scale rows ride the page lifecycle through deferral and preemption:
+    an under-provisioned int8 pool defers/preempts and the reallocated pages
+    (whose scale rows held stale values from the evicted request) are
+    rewritten on re-scatter, so streams still match the roomy pool."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(22)
+    reqs = [(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32), 17)
+            for _ in range(2)]
+    roomy, _ = _streams(cfg, opts, params, reqs, paged=True, n_slots=2,
+                        max_seq=32, kv_dtype="int8")
+    tight, eng = _streams(cfg, opts, params, reqs, paged=True, n_slots=2,
+                          max_seq=32, num_pages=6, kv_dtype="int8")
+    assert tight == roomy
+    assert eng.stats.pages_hwm <= 5
+
+
+def test_copy_pages_carries_scales():
+    """The jitted COW page copy moves a page's scale row in lockstep with
+    its values: after fork + prepare_write the copy must dequantize to the
+    same numbers, even when the two pages' scales differ."""
+    from repro.models import kv_quant
+    from repro.models import model as M
+    from repro.models.layers import ModelOptions
+    from repro.models.stacks import is_paged_leaf, is_scale_leaf
+    from repro.serving.engine import _copy_pages
+    cfg, _ = reduced_params("smollm-135m")
+    caches = M.init_caches(cfg, 2, 32, jnp.float32,
+                           ModelOptions(remat=False), paged=True,
+                           num_pages=6, page_size=8, kv_dtype="int8")
+    # page p gets codes p and scale p/127 -> dequantized constant p*p/127
+    caches = jax.tree_util.tree_map_with_path(
+        lambda path, leaf:
+        (leaf + (jnp.arange(6, dtype=jnp.float32) / 127.0).reshape(
+            (1, 6, 1) if leaf.ndim == 3 else (6, 1)))
+        if is_scale_leaf(path) else
+        (leaf + jnp.arange(6, dtype=jnp.int8).reshape(
+            (1, 6, 1, 1, 1) if leaf.ndim == 5 else (6, 1, 1, 1)))
+        if is_paged_leaf(path) else leaf, caches)
+    out = _copy_pages(caches, jnp.asarray([3, 0, 0, 0], jnp.int32),
+                      jnp.asarray([5, 0, 0, 0], jnp.int32))
+
+    def check(path, leaf):
+        if is_scale_leaf(path):
+            rows = leaf if leaf.ndim == 2 else leaf[0]
+            np.testing.assert_allclose(np.asarray(rows[5]), 3 / 127.0,
+                                       rtol=1e-6, err_msg=str(path))
+            np.testing.assert_allclose(np.asarray(rows[1]), 1 / 127.0,
+                                       rtol=1e-6, err_msg=str(path))
+        elif is_paged_leaf(path):
+            pages = leaf if leaf.ndim == 4 else leaf[0]
+            assert int(pages[5].min()) == 3, path      # codes copied
+            assert int(pages[3].min()) == 3, path      # source intact
+            assert int(pages[1].max()) == 1, path      # others untouched
+    jax.tree_util.tree_map_with_path(check, out)
+
+
+def test_scatter_pages_quantizes_and_writes_scales(opts):
+    """_scatter_pages encodes prefill KV into the int8 pool with
+    amax-derived per-page-per-head scales: dequantized pages reconstruct the
+    dense prefill rows, scales land only on the destination pages, and
+    non-destination pages keep scale 0."""
+    from repro.models import kv_quant
+    from repro.models import model as M
+    from repro.models.stacks import is_paged_leaf, is_scale_leaf
+    from repro.serving.engine import _path_keys, _scatter_pages
+    cfg, params = reduced_params("smollm-135m")
+    ps, n_pages = 8, 6
+    logits, cache1 = M.prefill(cfg, opts, params,
+                               {"tokens": jnp.arange(16)[None]}, 16,
+                               cache_dtype=jnp.float32)
+    caches = M.init_caches(cfg, 1, 16, jnp.float32, opts, paged=True,
+                           num_pages=n_pages, page_size=ps, kv_dtype="int8")
+    dest = jnp.asarray([2, 4], jnp.int32)              # 16 tokens = 2 pages
+    out = _scatter_pages(caches, cache1, dest, ps)
+    flat1 = {_path_keys(p): l for p, l in
+             jax.tree_util.tree_leaves_with_path(cache1)}
+    checked = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(out):
+        if not is_paged_leaf(path) or is_scale_leaf(path):
+            continue
+        keys = _path_keys(path)
+        pages = leaf if leaf.ndim == 4 else leaf[0]    # [P, ps, K, h]
+        scales = None
+        for p2, l2 in jax.tree_util.tree_leaves_with_path(out):
+            if _path_keys(p2) == keys[:-1] + (keys[-1] + "_scale",):
+                scales = l2 if l2.ndim == 2 else l2[0]
+        dense = flat1[keys]                            # [(nb,)1,S,K,h]
+        dense = dense if dense.ndim == 4 else dense[0]
+        rows = dense.reshape(2, ps, *dense.shape[2:])  # page-major
+        for i, d in enumerate([2, 4]):
+            deq = kv_quant.decode(pages[d], scales[d][None, :, None])
+            np.testing.assert_allclose(np.asarray(deq), np.asarray(rows[i]),
+                                       atol=float(scales[d].max()) * 0.51,
+                                       err_msg=str(path))
+        assert float(scales[1].max()) == 0.0           # non-dest untouched
+        assert float(scales[5].max()) == 0.0
+        checked += 1
+    assert checked > 0
+
+
+def test_update_cache_paged_quantized_monotone_scale():
+    """Decode quantize-on-write: the page scale grows monotonically with the
+    written token's amax, existing rows are requantized (not lost) when it
+    grows, and a rewrite at an unchanged scale is drift-free."""
+    from repro.models import kv_quant
+    from repro.models.layers import update_cache_paged
+    ps, K, h = 4, 2, 8
+    pages = jnp.zeros((3, ps, K, h), jnp.int8)
+    scales = jnp.zeros((3, K), jnp.float32)
+    pt = jnp.asarray([[1, 2]], jnp.int32)
+    small = jnp.full((1, 1, K, h), 0.5, jnp.float32)
+    big = jnp.full((1, 1, K, h), 2.0, jnp.float32)
+    pages, scales = update_cache_paged(pages, small, pt, 0, scales)
+    s0 = np.asarray(scales[1]).copy()
+    np.testing.assert_allclose(s0, 0.5 / 127.0, rtol=1e-6)
+    pages, scales = update_cache_paged(pages, big, pt, 1, scales)
+    np.testing.assert_allclose(np.asarray(scales[1]), 2.0 / 127.0, rtol=1e-6)
+    # row 0 (written under the smaller scale) survived the requantization
+    deq = kv_quant.decode(pages[1], np.asarray(scales[1])[None, :, None])
+    np.testing.assert_allclose(np.asarray(deq[0]), 0.5, atol=2.0 / 127.0)
+    np.testing.assert_allclose(np.asarray(deq[1]), 2.0, atol=2.0 / 127.0)
+    # writing a smaller token later must not shrink the scale (monotone)...
+    pages, scales = update_cache_paged(pages, small, pt, 2, scales)
+    np.testing.assert_allclose(np.asarray(scales[1]), 2.0 / 127.0, rtol=1e-6)
+    # ...and an identical rewrite is bit-stable (encode(decode(c)) == c)
+    pages2, scales2 = update_cache_paged(pages, small, pt, 2, scales)
+    assert jnp.array_equal(pages, pages2) and jnp.array_equal(scales, scales2)
+
+
+def test_growth_pages_get_clean_scales(opts):
+    """A page freed by one request and handed to another via decode growth
+    must not leak its old scale into the new owner's quantize-on-write:
+    streams from a pool with dirty history match a fresh pool's. Forced
+    directly: poison every scale row, then check _ensure_pages growth resets
+    exactly the grown pages' rows (COW-copied and held pages excluded)."""
+    from repro.models.stacks import is_scale_leaf
+    from repro.serving.engine import _reset_page_scales
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+    eng = ServingEngine(cfg, opts, params, n_slots=1, max_seq=32, eos=-999,
+                        paged=True, page_size=8, kv_dtype="int8")
+    eng.submit(Request(uid=0, prompt=prompt.copy(), max_tokens=10))
+    eng._admit()
+    held = list(eng.pool.slot_pages[0])
+    # poison: pretend every page once belonged to a large-scale request
+    eng.caches = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: leaf + 7.0 if is_scale_leaf(path) else leaf,
+        eng.caches)
+    eng._ensure_pages(eng.tick_tokens)
+    grown = [p for p in eng.pool.slot_pages[0] if p not in held]
+    assert grown, "test setup: tick must require page growth"
+    for path, leaf in jax.tree_util.tree_leaves_with_path(eng.caches):
+        if not is_scale_leaf(path):
+            continue
+        rows = leaf if leaf.ndim == 2 else leaf[0]
+        for p in grown:
+            assert float(jnp.abs(rows[p]).max()) == 0.0, (path, p)
+        for p in held:
+            assert float(rows[p].min()) >= 7.0, (path, p)  # held: untouched
+    # and the unit helper resets only what it is told to
+    again = _reset_page_scales(eng.caches, jnp.asarray(held[:1], jnp.int32))
+    for path, leaf in jax.tree_util.tree_leaves_with_path(again):
+        if is_scale_leaf(path):
+            rows = leaf if leaf.ndim == 2 else leaf[0]
+            assert float(jnp.abs(rows[held[0]]).max()) == 0.0
+
+
+def test_quantized_null_page_stays_zero(opts):
+    """Retired/empty slots riding a fused tick write into null page 0; the
+    quantized write masks their codes and scale updates, so page 0 keeps
+    its documented all-zero, scale-0 state (unit: a page-table row of zeros
+    is a sink; e2e: an engine run with an idle slot leaves page 0 clean)."""
+    from repro.models.layers import update_cache_paged
+    from repro.models.stacks import is_paged_leaf, is_scale_leaf
+    pages = jnp.zeros((3, 4, 2, 8), jnp.int8)
+    scales = jnp.zeros((3, 2), jnp.float32)
+    pt = jnp.asarray([[0, 0], [1, 2]], jnp.int32)     # slot 0 retired
+    new = jnp.full((2, 1, 2, 8), 3.0, jnp.float32)
+    pages, scales = update_cache_paged(pages, new, pt, jnp.asarray([5, 1]),
+                                       scales)
+    assert int(jnp.abs(pages[0]).max()) == 0 and float(scales[0].max()) == 0
+    assert float(scales[1].max()) > 0                 # live slot wrote
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(24)
+    reqs = [(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32), 6)]
+    _, eng = _streams(cfg, opts, params, reqs, paged=True, n_slots=2,
+                      kv_dtype="int8")
+    for path, leaf in jax.tree_util.tree_leaves_with_path(eng.caches):
+        if is_scale_leaf(path):
+            p0 = leaf[:, 0] if leaf.ndim == 3 else leaf[0]
+            assert float(jnp.abs(p0).max()) == 0.0, path
+        elif is_paged_leaf(path):
+            p0 = leaf[:, 0] if leaf.ndim == 5 else leaf[0]
+            assert int(jnp.abs(p0.astype(jnp.int32)).max()) == 0, path

@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Docs link check: every relative markdown link in README.md and docs/
+must resolve to an existing file (anchors are stripped; external URLs and
+badge/workflow links are skipped). Exits non-zero listing broken links —
+run by CI so the docs tree cannot rot silently.
+
+    python tools/check_docs_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def links_of(md: pathlib.Path):
+    for target in LINK.findall(md.read_text()):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        if target.startswith("../../"):
+            continue  # repo-relative GitHub UI links (CI badge) — no file
+        yield target.split("#", 1)[0]
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    broken = []
+    checked = 0
+    for md in files:
+        if not md.exists():
+            broken.append((md.relative_to(root), "<file missing>"))
+            continue
+        for target in links_of(md):
+            checked += 1
+            if not (md.parent / target).resolve().exists():
+                broken.append((md.relative_to(root), target))
+    for src, target in broken:
+        print(f"BROKEN  {src}: {target}")
+    print(f"checked {checked} relative links in {len(files)} files, "
+          f"{len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
