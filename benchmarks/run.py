@@ -17,7 +17,7 @@ import traceback
 from benchmarks import (claims_check, decode_microbench, engine_bench,
                         fig2_phase_latency, fig3_control_frequency,
                         kv_cache_bench, perf_compare, roofline_report,
-                        table1_hardware)
+                        scheduler_bench, table1_hardware)
 
 MODULES = {
     "claims": claims_check,
@@ -29,6 +29,7 @@ MODULES = {
     "micro": decode_microbench,
     "engine": engine_bench,
     "kv_cache": kv_cache_bench,
+    "scheduler": scheduler_bench,
 }
 
 

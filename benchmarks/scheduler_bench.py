@@ -1,0 +1,208 @@
+"""Chunked-prefill scheduler: bit-exactness, prefix-skip compute, and
+decode-tick latency under mixed arrivals.
+
+Three gates (violations raise; this is the CI smoke for the scheduler
+subsystem — see docs/scheduler.md for the tick anatomy and
+docs/benchmarks.md for how to read the output):
+
+1. **Bit-equality across chunkings.** Greedy token streams from the chunked
+   engine must be bit-identical to the monolithic admit-stall baseline for
+   chunk sizes {16, 64, full}, on both the dense and the paged layout. This
+   is the prefill-from-position contract: a chunk attending to the cache
+   under the offset causal mask reproduces monolithic prefill exactly
+   (masked lanes contribute exact zeros), so *how* a prompt is chunked can
+   never change what the model says.
+2. **Prefix-hit compute skip.** Repeated prompts (the serving pattern for
+   repeated robot observations) must *skip* the shared fraction of prefill:
+   ``EngineStats.prefill_tokens + prefill_skipped == total prompt
+   positions`` and the skipped count covers >= the shared full pages of
+   every repeat — while the streams still match the no-cache baseline
+   bit-for-bit (the skipped pages' KV is read, not recomputed).
+3. **Head-of-line blocking under mixed arrivals.** With a long prompt
+   arriving while short requests decode: (a) *structural* — the baseline
+   must pay the whole prompt inside one tick while no scheduler tick may
+   prefill more than the token budget (``tick_prefill_tokens``,
+   deterministic on any machine); (b) *wall clock* — chunked p99 tick
+   latency <= 0.8x the baseline's p99 (warm jit caches, interleaved
+   best-of rounds, retried before failing so a loaded dev box doesn't
+   flake what a quiet CI runner measures cleanly).
+
+Reported rows: per-configuration tokens/s, prefill-token accounting, TTFT /
+queue means, and tick-latency percentiles for both engines.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+from repro.serving import Request, ServingEngine
+
+DESCRIPTION = ("Chunked-prefill scheduler gates: greedy streams bit-identical "
+               "to monolithic prefill for chunk sizes {16,64,full} (dense + "
+               "paged), prefix hits skip >= the shared fraction of prefill "
+               "tokens, and p99 tick latency under mixed arrivals <= 0.8x "
+               "the admit-stall baseline")
+
+ARCH = "smollm-135m"
+PAGE_SIZE = 16
+MAX_SEQ = 256
+N_SLOTS = 2
+LONG_PROMPT = 240           # the head-of-line blocker for gate 3
+TOKEN_BUDGET = 48
+P99_RATIO = 0.8
+
+
+def _make_engine(cfg, opts, params, **kw):
+    kw.setdefault("tick_tokens", 4)
+    return ServingEngine(cfg, opts, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                         eos=-999, fused=True, **kw)
+
+
+def _run(cfg, opts, params, reqs, **kw):
+    eng = _make_engine(cfg, opts, params, **kw)
+    for i, (p, m) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=p.copy(), max_tokens=m))
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    assert len(done) == len(reqs), "engine dropped requests"
+    return {r.uid: r.out_tokens for r in done}, eng, wall
+
+
+def run(emit):
+    cfg = get_config(ARCH).reduced()
+    opts = ModelOptions(remat=False)
+    params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    rng = np.random.default_rng(0)
+
+    # mixed prompt lengths, none dividing the chunk sizes evenly
+    reqs = [(rng.integers(0, cfg.vocab_size, l, dtype=np.int32), m)
+            for l, m in [(37, 8), (9, 6), (65, 5), (18, 9), (50, 4)]]
+    total_prompt = sum(len(p) for p, _ in reqs)
+
+    # -- gate 1: bit-equality across chunk sizes and layouts ---------------
+    base, eng_b, wall = _run(cfg, opts, params, reqs)
+    n_tok = sum(len(v) for v in base.values())
+    emit("scheduler/monolithic/decode", wall / n_tok * 1e6,
+         f"tok_s={n_tok / wall:.1f}")
+    for chunk in (16, 64, MAX_SEQ):
+        for paged in (False, True):
+            toks, eng, wall = _run(
+                cfg, opts, params, reqs, chunked_prefill=True,
+                chunk_size=chunk, token_budget=max(TOKEN_BUDGET, chunk),
+                paged=paged, page_size=PAGE_SIZE)
+            tag = f"chunk{chunk}_{'paged' if paged else 'dense'}"
+            assert toks == base, \
+                f"{tag}: chunked greedy streams diverged from monolithic"
+            assert eng.stats.prefill_tokens == total_prompt, \
+                f"{tag}: prefill token accounting off " \
+                f"({eng.stats.prefill_tokens} != {total_prompt})"
+            emit(f"scheduler/{tag}/decode", wall / n_tok * 1e6,
+                 f"tok_s={n_tok / wall:.1f};bit_equal=True;"
+                 f"prefill_tokens={eng.stats.prefill_tokens}")
+    emit("scheduler/bit_equal", 1.0,
+         "chunk_sizes=16,64,full;layouts=dense,paged")
+
+    # -- gate 2: prefix hits skip recomputation ----------------------------
+    shared = rng.integers(0, cfg.vocab_size, 64, dtype=np.int32)
+    rep_reqs = [(shared, 6),
+                (rng.integers(0, cfg.vocab_size, 33, dtype=np.int32), 8),
+                (shared, 5),
+                (shared, 7)]
+    rep_total = sum(len(p) for p, _ in rep_reqs)
+    rep_base, _, _ = _run(cfg, opts, params, rep_reqs)
+    toks, eng, _ = _run(cfg, opts, params, rep_reqs, chunked_prefill=True,
+                        chunk_size=16, token_budget=TOKEN_BUDGET,
+                        paged=True, page_size=PAGE_SIZE)
+    assert toks == rep_base, \
+        "prefix-skip streams diverged from the no-cache baseline"
+    st = eng.stats
+    assert st.prefill_tokens + st.prefill_skipped == rep_total, \
+        f"prefill accounting: {st.prefill_tokens} run + " \
+        f"{st.prefill_skipped} skipped != {rep_total} prompt positions"
+    # each repeat shares every full page short of the prompt end; the skip
+    # is capped one page early so the last-token logits are computed
+    shared_pages = (len(shared) - 1) // PAGE_SIZE
+    min_skip = 2 * shared_pages * PAGE_SIZE
+    assert st.prefill_skipped >= min_skip, \
+        f"prefix hits skipped only {st.prefill_skipped} prefill tokens " \
+        f"(shared fraction is >= {min_skip})"
+    frac = st.prefill_skipped / rep_total
+    emit("scheduler/prefix_skip/tokens", float(st.prefill_skipped),
+         f"total={rep_total};frac={frac:.3f};min={min_skip};"
+         f"prefix_hits={st.prefix_hits};bit_equal=True")
+
+    # -- gate 3: p99 tick latency under mixed arrivals ---------------------
+    # short decode-heavy requests + one long prompt landing behind them: the
+    # admit-stall baseline pays the whole LONG_PROMPT prefill inside one
+    # tick; the scheduler spreads it across ticks under the token budget.
+    # tick_tokens=1 keeps the decode stage identical (and small) on both
+    # sides so the tick-latency difference is the prefill policy, not the
+    # fused-tick depth; best-of-3 p99 de-noises shared CPU.
+    mix_reqs = [(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32), 24),
+                (rng.integers(0, cfg.vocab_size, 12, dtype=np.int32), 24),
+                (rng.integers(0, cfg.vocab_size, LONG_PROMPT,
+                              dtype=np.int32), 8),
+                (rng.integers(0, cfg.vocab_size, 10, dtype=np.int32), 16)]
+    # budget 18 = one 16-token chunk + the two decode slots' reservation:
+    # a scheduler tick never carries more than one prefill dispatch, so the
+    # worst tick stays near the median and the contrast with the baseline's
+    # whole-prompt tick is structural, not a timing accident
+    stall_kw = dict(tick_tokens=1)
+    chunk_kw = dict(tick_tokens=1, chunked_prefill=True, chunk_size=16,
+                    token_budget=18, paged=True, page_size=PAGE_SIZE)
+    mix_base, eng_b, _ = _run(cfg, opts, params, mix_reqs, **stall_kw)  # warm
+    mix_chunk, eng_c, _ = _run(cfg, opts, params, mix_reqs, **chunk_kw)
+    assert mix_chunk == mix_base, "mixed-arrival streams diverged"
+    # 3a (structural, deterministic): the head-of-line blocker itself. The
+    # admit-stall baseline must pay the whole LONG_PROMPT inside one tick;
+    # no scheduler tick may prefill more than the token budget. This is the
+    # *cause* of the latency tail and is load-independent.
+    stall_max = max(eng_b.stats.tick_prefill_tokens)
+    sched_max = max(eng_c.stats.tick_prefill_tokens)
+    assert stall_max >= LONG_PROMPT, \
+        f"baseline should pay the {LONG_PROMPT}-token prompt (plus any " \
+        f"co-admitted short one) in one tick, saw {stall_max}"
+    assert sched_max <= chunk_kw["token_budget"], \
+        f"a scheduler tick prefilled {sched_max} tokens (> budget " \
+        f"{chunk_kw['token_budget']})"
+    emit("scheduler/tick_prefill_max", float(sched_max),
+         f"stall_max={stall_max};budget={chunk_kw['token_budget']};"
+         f"ratio={sched_max / stall_max:.3f}")
+    # 3b (wall clock): interleaved rounds + per-engine min de-noise
+    # transient co-tenants; a saturated machine can still drown the ~10ms
+    # signal, so the measurement is retried before failing (CI is serial
+    # and quiet — retries are for shared dev boxes).
+    for attempt in range(3):
+        engines = {}
+        vals = {"stall": [], "sched": []}
+        for _ in range(3):
+            for tag, kw in (("stall", stall_kw), ("sched", chunk_kw)):
+                _, eng, _ = _run(cfg, opts, params, mix_reqs, **kw)
+                vals[tag].append(float(np.percentile(eng.stats.tick_s, 99)))
+                engines[tag] = eng
+        p99 = {tag: min(v) for tag, v in vals.items()}
+        if p99["sched"] <= P99_RATIO * p99["stall"]:
+            break
+    for tag, eng in engines.items():
+        ph = eng.stats.phase_report()
+        emit(f"scheduler/{tag}/tick_p99", p99[tag] * 1e6,
+             f"p50={np.percentile(eng.stats.tick_s, 50) * 1e6:.0f}us;"
+             f"ticks={len(eng.stats.tick_s)};"
+             f"decode_p99={ph.get('decode_tick_p99', 0) * 1e6:.0f}us;"
+             f"ttft_mean={np.mean(eng.stats.ttft_s):.4f};"
+             f"queue_mean={np.mean(eng.stats.queue_s):.4f}")
+    assert p99["sched"] <= P99_RATIO * p99["stall"], \
+        f"scheduler p99 tick {p99['sched'] * 1e3:.1f}ms not <= " \
+        f"{P99_RATIO}x admit-stall p99 {p99['stall'] * 1e3:.1f}ms " \
+        f"(after {attempt + 1} attempts — is the machine saturated?)"
+    emit("scheduler/tick_p99_ratio", p99["sched"] / p99["stall"],
+         f"gate<={P99_RATIO};stall_p99_ms={p99['stall'] * 1e3:.2f};"
+         f"sched_p99_ms={p99['sched'] * 1e3:.2f};attempts={attempt + 1}")

@@ -35,6 +35,14 @@ def main(argv=None):
     p.add_argument("--pallas", action="store_true",
                    help="route decode through the flash-decode Pallas "
                         "kernels (interpret mode on CPU: slow, real path)")
+    p.add_argument("--chunked-prefill", action="store_true",
+                   help="token-budget scheduler: chunked prefill packed "
+                        "between decode ticks, prefix hits skip compute")
+    p.add_argument("--chunk-size", type=int, default=8,
+                   help="prefill chunk tokens (multiple of --page-size "
+                        "when --paged)")
+    p.add_argument("--token-budget", type=int, default=24,
+                   help="tokens one tick may spend (decode + chunks)")
     args = p.parse_args(argv)
 
     cfg = get_config("qwen1.5-0.5b").reduced()
@@ -45,7 +53,10 @@ def main(argv=None):
                         fused=not args.reference,
                         tick_tokens=args.tick_tokens,
                         paged=args.paged, page_size=args.page_size,
-                        kv_dtype=args.kv_dtype)
+                        kv_dtype=args.kv_dtype,
+                        chunked_prefill=args.chunked_prefill,
+                        chunk_size=args.chunk_size,
+                        token_budget=args.token_budget)
 
     rng = np.random.default_rng(0)
     shared_prompt = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
@@ -76,6 +87,15 @@ def main(argv=None):
         print(f"paged KV pool ({args.kv_dtype}): pages_hwm {st.pages_hwm} | "
               f"cache_bytes_hwm {st.cache_bytes_hwm} | "
               f"prefix_hits {st.prefix_hits}")
+    if args.chunked_prefill:
+        ph = st.phase_report()
+        print(f"scheduler: chunk {args.chunk_size} / budget "
+              f"{args.token_budget} | prefill_tokens {st.prefill_tokens} "
+              f"(+{st.prefill_skipped} skipped via prefix cache) | "
+              f"ttft mean {np.mean(st.ttft_s):.3f}s | "
+              f"decode tick p50/p99 "
+              f"{ph.get('decode_tick_p50', 0.0) * 1e3:.1f}/"
+              f"{ph.get('decode_tick_p99', 0.0) * 1e3:.1f} ms")
     print("per-request phases (queue+prefill | decode):")
     for r in sorted(done, key=lambda r: r.uid)[:6]:
         print(f"  req {r.uid:2d}: {r.t_prefill - r.t_submit:6.3f}s | "

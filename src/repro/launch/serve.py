@@ -53,6 +53,17 @@ def main(argv=None):
                         "kernels (dense or paged per --paged); on CPU they "
                         "run in interpret mode, which is slow but exercises "
                         "the real kernel path")
+    p.add_argument("--chunked-prefill", action="store_true",
+                   help="token-budget scheduler: prompts prefill in fixed "
+                        "chunks packed between decode ticks instead of "
+                        "admit-stall; prefix-cache hits skip the shared "
+                        "prefill compute (see docs/scheduler.md)")
+    p.add_argument("--chunk-size", type=int, default=32,
+                   help="prefill chunk tokens (must divide by --page-size "
+                        "when --paged)")
+    p.add_argument("--token-budget", type=int, default=64,
+                   help="tokens one tick may spend across decode steps and "
+                        "prefill chunks")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -67,7 +78,10 @@ def main(argv=None):
                         tick_tokens=args.tick_tokens,
                         paged=args.paged, page_size=args.page_size,
                         num_pages=args.num_pages or None,
-                        kv_dtype=args.kv_dtype)
+                        kv_dtype=args.kv_dtype,
+                        chunked_prefill=args.chunked_prefill,
+                        chunk_size=args.chunk_size,
+                        token_budget=args.token_budget)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -85,6 +99,14 @@ def main(argv=None):
     print(f"[serve] {st.decode_syncs} decode host syncs / "
           f"{st.device_steps} device steps "
           f"({'fused' if not args.reference else 'reference'} path)")
+    if args.chunked_prefill:
+        ph = st.phase_report()
+        print(f"[serve] scheduler: chunk={args.chunk_size} "
+              f"budget={args.token_budget} "
+              f"prefill_tokens={st.prefill_tokens} "
+              f"skipped={st.prefill_skipped} "
+              f"ttft_mean={np.mean(st.ttft_s):.3f}s "
+              f"decode_tick_p99={ph.get('decode_tick_p99', 0.0):.4f}s")
     if args.paged:
         print(f"[serve] paged KV: page_size={args.page_size} "
               f"kv_dtype={args.kv_dtype} "

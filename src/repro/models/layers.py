@@ -332,14 +332,38 @@ def update_cache(cache, new, index):
             c, n.astype(c.dtype), i, 0))(cache, new, idx)
 
 
-def update_cache_paged(pages, new, page_table, index, scales=None):
+def update_cache_chunk(cache, new, index, n_valid=None):
+    """Write a prefill chunk ``new`` [B,C,K,h] into ``cache`` [B,Smax,K,h]
+    at positions ``index .. index+C-1`` (``index`` scalar or [B]) via
+    scatter rather than ``dynamic_update_slice``: rows at or past
+    ``n_valid`` — the padding tail of a partial final chunk — get an
+    out-of-bounds target index, which jax scatter *drops* (where a slice
+    update would clamp the start and shift the whole write onto earlier,
+    already-correct positions)."""
+    B, C = new.shape[:2]
+    smax = cache.shape[1]
+    idx = (jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1, 1),
+                            (B, 1))
+           + jnp.arange(C, dtype=jnp.int32)[None])            # [B,C]
+    if n_valid is not None:
+        nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1, 1),
+                              (B, 1))
+        idx = jnp.where(jnp.arange(C)[None] < nv, idx, smax)
+    return cache.at[jnp.arange(B)[:, None], idx].set(new.astype(cache.dtype))
+
+
+def update_cache_paged(pages, new, page_table, index, scales=None,
+                       valid=None):
     """Write the decode token's KV into the page pool; quantize on write
     when the pool is quantized. Returns ``(pages, scales)`` (scales is None
     for unquantized pools).
 
     pages [num_pages, page_size, K, h]; new [B,1,K,h]; page_table [B,npg]
     int32; index scalar or per-slot [B] vector; scales [num_pages, K]
-    float32 (quantized pools only). Logical position ``i`` of slot ``b``
+    float32 (quantized pools only). ``valid`` (scalar or [B] bool, default
+    all-true) additionally routes masked rows to the null-page sink as
+    zeros — the chunked-prefill path uses it for the padding rows of a
+    partial final chunk. Logical position ``i`` of slot ``b``
     lives at (page_table[b, i // page_size], i % page_size). Distinct live
     slots always own distinct write pages, so the scatter has no cross-slot
     collisions (retired slots' table rows point at the reserved null page 0,
@@ -361,6 +385,10 @@ def update_cache_paged(pages, new, page_table, index, scales=None):
     B = new.shape[0]
     idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
     pid = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
+    if valid is not None:
+        live = jnp.broadcast_to(jnp.asarray(valid, bool).reshape(-1), (B,))
+        pid = jnp.where(live, pid, 0)
+        new = jnp.where(live[:, None, None, None], new, 0)
     if scales is None:
         return pages.at[pid, idx % ps].set(new[:, 0].astype(pages.dtype)), None
     from repro.models import kv_quant
@@ -389,6 +417,43 @@ def update_cache_paged(pages, new, page_table, index, scales=None):
 
     return jax.lax.cond(jnp.any(new_scale > old_scale), rescale, row_only,
                         pages, scales)
+
+
+def update_cache_paged_chunk(pages, new, page_table, start, n_valid=None,
+                             scales=None):
+    """Page-wise scatter of one prefill chunk: write ``new`` [B,C,K,h] into
+    the pool at logical positions ``start .. start+C-1`` of each slot
+    (``start`` scalar or [B]). Rows at or past ``n_valid`` (the padding tail
+    of a partial final chunk) are routed to the null page as zeros, so a
+    chunk is always a fixed ``C``-shaped dispatch regardless of how much of
+    it is real prompt. Returns ``(pages, scales)`` like ``update_cache_paged``.
+
+    Unquantized pools take one vectorized scatter (distinct valid rows hit
+    distinct (page, offset) cells — a slot owns its pages and positions are
+    consecutive). Quantized pools replay the rows through the per-token
+    monotone-amax write so chunked prefill shares the exact growth semantics
+    (and drift characteristics) of the decode write path."""
+    B, C = new.shape[:2]
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (B,))
+    nv = jnp.broadcast_to(
+        jnp.asarray(C if n_valid is None else n_valid, jnp.int32).reshape(-1),
+        (B,))
+    ps = pages.shape[1]
+    if scales is None:
+        idx = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]   # [B,C]
+        live = jnp.arange(C)[None] < nv[:, None]                      # [B,C]
+        pid = jnp.take_along_axis(page_table, idx // ps, axis=1)
+        pid = jnp.where(live, pid, 0)
+        rows = jnp.where(live[..., None, None], new, 0)
+        return pages.at[pid, idx % ps].set(rows.astype(pages.dtype)), None
+
+    def body(i, carry):
+        pages, scales = carry
+        row = jax.lax.dynamic_slice_in_dim(new, i, 1, 1)              # [B,1]
+        return update_cache_paged(pages, row, page_table, start + i,
+                                  scales, valid=i < nv)
+
+    return jax.lax.fori_loop(0, C, body, (pages, scales))
 
 
 def attention_decode_paged(q, k_pages, v_pages, page_table, index,
@@ -424,16 +489,44 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, index,
     return attention_decode(q, kd, vd, index, window)
 
 
+def _attend_cache_paged(q, k_pages, v_pages, page_table, positions,
+                        window: int, k_scales=None, v_scales=None):
+    """Prefill-chunk attention against a paged pool: gather the slot's pages
+    into the dense per-position view (dequantizing when scales are given)
+    and run the masked dense core. The gathered length is
+    ``npg * page_size`` — the same key axis the dense layout's chunk
+    attention uses — and unwritten/stale rows are excluded by the exact
+    positional mask, so paged and dense chunked prefill stay bit-identical
+    for unquantized pools."""
+    from repro.kernels.decode_attention.ref import gather_pages, gather_scales
+    ps = k_pages.shape[1]
+    kd = gather_pages(k_pages, page_table)
+    vd = gather_pages(v_pages, page_table)
+    if k_scales is not None:
+        kd = kd.astype(jnp.float32) * gather_scales(k_scales, page_table, ps)
+        vd = vd.astype(jnp.float32) * gather_scales(v_scales, page_table, ps)
+    q_pos = positions[0] if positions.ndim == 2 else positions
+    return attention_dense(q, kd, vd, q_pos, jnp.arange(kd.shape[1]), window,
+                           causal=True)
+
+
 def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
               positions, cache=None, cache_index=None, ctx=None,
-              ctx_prefix: str = "", causal: bool = True, page_table=None):
+              ctx_prefix: str = "", causal: bool = True, page_table=None,
+              n_valid=None):
     """Full attention sub-layer (projections + core + output proj).
 
     Decode mode when ``cache`` is a (k,v) tuple and x has S==1.
     Cross-attention when ``ctx`` (encoder output) is given: K/V from ctx.
     With ``page_table`` [B,npg] the cache tuple is interpreted as paged
-    pools [num_pages, page_size, K, h] (decode only; prefill stays dense —
-    the serving engine scatters prefill KV into pages).
+    pools [num_pages, page_size, K, h]; S>1 runs a prefill chunk that is
+    scattered page-wise and attends through the gathered pool.
+    Prefill with a cache supports ``cache_index > 0`` (chunked prefill /
+    prefill-from-position): the chunk is written at its positions and its
+    queries attend against the *whole* cache under the positional causal
+    mask, so earlier chunks — or prefix-cache pages the engine never
+    recomputed — are visible. ``n_valid`` masks the padding tail of a
+    partial final chunk out of the write path.
     Returns (out, new_cache).
     """
     pre = ctx_prefix
@@ -460,31 +553,43 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
     if cache is not None and not pre:
         if page_table is not None:
             # paged layout: cache leaves are shared pools, positions resolve
-            # through the per-slot page table (decode only); a 4-tuple cache
-            # carries per-page quantization scales (see models.kv_quant)
-            if S != 1:
-                raise ValueError("paged caches support single-token decode; "
-                                 "prefill runs dense and is scattered into "
-                                 "pages by the serving engine")
+            # through the per-slot page table; a 4-tuple cache carries
+            # per-page quantization scales (see models.kv_quant)
             k_sc, v_sc = cache[2:] if len(cache) == 4 else (None, None)
-            k_cache, k_sc = update_cache_paged(cache[0], k, page_table,
-                                               cache_index, k_sc)
-            v_cache, v_sc = update_cache_paged(cache[1], v, page_table,
-                                               cache_index, v_sc)
+            if S == 1:
+                k_cache, k_sc = update_cache_paged(cache[0], k, page_table,
+                                                   cache_index, k_sc)
+                v_cache, v_sc = update_cache_paged(cache[1], v, page_table,
+                                                   cache_index, v_sc)
+            else:   # prefill chunk: page-wise scatter at cache_index
+                k_cache, k_sc = update_cache_paged_chunk(
+                    cache[0], k, page_table, cache_index, n_valid, k_sc)
+                v_cache, v_sc = update_cache_paged_chunk(
+                    cache[1], v, page_table, cache_index, n_valid, v_sc)
             new_cache = (k_cache, v_cache)
             if k_sc is not None:
                 new_cache += (k_sc, v_sc)
-            out = attention_decode_paged(q, k_cache, v_cache, page_table,
-                                         cache_index, window, opts,
-                                         k_scales=k_sc, v_scales=v_sc)
+            if S == 1:
+                out = attention_decode_paged(q, k_cache, v_cache, page_table,
+                                             cache_index, window, opts,
+                                             k_scales=k_sc, v_scales=v_sc)
+            else:
+                out = _attend_cache_paged(q, k_cache, v_cache, page_table,
+                                          positions, window,
+                                          k_scales=k_sc, v_scales=v_sc)
         else:
             smax = cache[0].shape[1]
             ring = (window != GLOBAL_WINDOW and smax == window)
-            write_index = cache_index % smax if ring else cache_index
             if not ring and S > smax:
                 raise ValueError(f"prefill length {S} exceeds cache {smax}")
-            k_cache = update_cache(cache[0], k, write_index)
-            v_cache = update_cache(cache[1], v, write_index)
+            if ring:
+                k_cache = update_cache(cache[0], k, cache_index % smax)
+                v_cache = update_cache(cache[1], v, cache_index % smax)
+            else:
+                k_cache = update_cache_chunk(cache[0], k, cache_index,
+                                             n_valid)
+                v_cache = update_cache_chunk(cache[1], v, cache_index,
+                                             n_valid)
             new_cache = (k_cache, v_cache)
             if S == 1:
                 if ring:
@@ -493,9 +598,22 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
                 else:
                     out = attention_decode(q, k_cache, v_cache, cache_index,
                                            window, opts)
-            else:  # prefill: attend within the fresh chunk (cache_index==0)
+            elif ring or (isinstance(cache_index, int) and cache_index == 0
+                          and S == smax):
+                # ring caches don't support positioned prefill, and a chunk
+                # filling the whole buffer has no earlier cache contents —
+                # both attend within the fresh chunk (flash/banded cores)
                 out = _core(q, k, v, positions, positions, window, opts,
                             causal)
+            else:
+                # prefill chunk at cache_index: attend against the cache,
+                # which holds this chunk (just written) and every earlier
+                # one; rows past the write point are zero/stale and the
+                # positional causal mask excludes them exactly, so the
+                # result is bit-identical across chunkings of the prompt
+                q_pos = positions[0] if positions.ndim == 2 else positions
+                out = attention_dense(q, k_cache, v_cache, q_pos,
+                                      jnp.arange(smax), window, causal)
     elif pre and ctx is not None:
         kpos = jnp.arange(k.shape[1])
         out = _core(q, k, v, positions, kpos, GLOBAL_WINDOW, opts, causal=False)

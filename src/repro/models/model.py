@@ -24,9 +24,9 @@ from repro.models.layers import ModelOptions, apply_norm
 from repro.models.params import PSpec, init_params, param_shapes  # re-export
 from repro.models.stacks import init_caches  # re-export
 
-__all__ = ["model_template", "forward", "prefill", "decode_step",
-           "decode_loop", "encode_vision", "init_params", "init_caches",
-           "ModelOptions"]
+__all__ = ["model_template", "forward", "prefill", "prefill_chunk",
+           "embed_prompt", "decode_step", "decode_loop", "encode_vision",
+           "init_params", "init_caches", "ModelOptions"]
 
 
 def model_template(cfg: ModelConfig) -> Dict:
@@ -123,16 +123,86 @@ def forward(cfg: ModelConfig, opts: ModelOptions, params, batch,
 
 
 def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
-            max_seq: int, cache_dtype=jnp.bfloat16):
+            max_seq: int, cache_dtype=jnp.bfloat16, caches=None,
+            cache_index=0, page_table=None):
     """Process the prompt, filling a decode cache sized ``max_seq``.
-    Returns (last-position logits [B,1,V], caches)."""
-    x, positions, ctx = _sequence(params, batch, cfg, opts)
-    B = x.shape[0]
-    caches = init_caches(cfg, B, max_seq, cache_dtype, opts)
+    Returns (last-position logits [B,1,V], caches).
+
+    ``cache_index > 0`` is prefill-from-position: ``batch['tokens']`` is a
+    *suffix* starting at that position, written into the supplied ``caches``
+    and attending to everything already there — the contract chunked prefill
+    and prefix-cache compute skip build on (a prefix hit prefills only the
+    non-shared suffix). Positioned prefill is tokens-only (a vision prefix
+    lives at positions 0..n_vis-1, which a suffix by definition starts
+    after) and needs ``caches`` from an earlier prefill or ``init_caches``.
+    ``page_table`` [B, npg] routes the writes/reads through a paged pool
+    (see serving.kv_pool)."""
+    positioned = caches is not None or page_table is not None \
+        or not (isinstance(cache_index, int) and cache_index == 0)
+    if not positioned:
+        x, positions, ctx = _sequence(params, batch, cfg, opts)
+        caches = init_caches(cfg, x.shape[0], max_seq, cache_dtype, opts)
+    else:
+        if caches is None:
+            raise ValueError("prefill from cache_index > 0 (or through a "
+                             "page table) needs existing caches")
+        if cfg.encoder is not None or "prefix" in batch or "patches" in batch:
+            raise ValueError("positioned prefill is tokens-only; fold the "
+                             "vision prefix in at cache_index == 0 (or use "
+                             "prefill_chunk over precomputed embeddings)")
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(
+            jnp.asarray(cache_index, jnp.int32) +
+            jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = _embed_tokens(params, tokens, cfg, positions=positions)
+        ctx = None
     x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
-                                     positions, caches=caches, cache_index=0,
-                                     ctx=ctx)
+                                     positions, caches=caches,
+                                     cache_index=cache_index, ctx=ctx,
+                                     page_table=page_table)
     return _logits(params, x[:, -1:], cfg), caches
+
+
+def embed_prompt(cfg: ModelConfig, opts: ModelOptions, params, batch):
+    """Embedding sequence for a prompt exactly as ``prefill`` would build it
+    (vision prefix folded in, absolute position table applied). The chunked
+    scheduler computes this once per request and slices it into fixed-size
+    ``prefill_chunk`` calls. Encoder-decoder models are not sliceable this
+    way (their cross-attention context is whole-sequence state)."""
+    if cfg.encoder is not None:
+        raise ValueError("chunked prefill does not support encoder-decoder "
+                         "models (whole-sequence cross-attention context)")
+    x, _, _ = _sequence(params, batch, cfg, opts)
+    return x
+
+
+def prefill_chunk(cfg: ModelConfig, opts: ModelOptions, params, embeds,
+                  caches, cache_index, n_valid=None, page_table=None):
+    """Positioned prefill over one chunk of precomputed embeddings
+    (``embed_prompt`` output sliced to [B, C, d], zero-padded to C).
+    Returns (last-valid-position logits [B, 1, V], caches).
+
+    The chunk's queries attend to every cache position ``<=`` their own —
+    earlier chunks, and prefix-cache pages the engine never recomputed —
+    under the offset causal mask. ``n_valid`` (scalar) marks how many rows
+    are real prompt: padding rows are masked out of the cache write path
+    (dense writes dropped, paged writes routed to the null page). Only the
+    row at ``n_valid - 1`` runs the lm-head projection — a full [C, vocab]
+    projection per chunk would rival the chunk's transformer cost, and the
+    caller samples from at most one position (the final chunk's last)."""
+    B, C, _ = embeds.shape
+    positions = jnp.broadcast_to(
+        jnp.asarray(cache_index, jnp.int32) +
+        jnp.arange(C, dtype=jnp.int32), (B, C))
+    x = constrain(embeds, "batch", "act_seq", "act_embed")
+    x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
+                                     positions, caches=caches,
+                                     cache_index=cache_index,
+                                     page_table=page_table, n_valid=n_valid)
+    last = C - 1 if n_valid is None else jnp.asarray(n_valid, jnp.int32) - 1
+    x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+    return _logits(params, x_last, cfg), caches
 
 
 def decode_step(cfg: ModelConfig, opts: ModelOptions, params, token,

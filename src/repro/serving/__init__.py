@@ -1,6 +1,9 @@
 from repro.serving.engine import EngineStats, Request, ServingEngine
 from repro.serving.kv_pool import KVPool, PoolExhausted
 from repro.serving.sampler import greedy, sample, sample_token
+from repro.serving.scheduler import (ChunkedScheduler, ChunkPlan,
+                                     PrefillTask, TickPlan)
 
-__all__ = ["EngineStats", "KVPool", "PoolExhausted", "Request",
-           "ServingEngine", "greedy", "sample", "sample_token"]
+__all__ = ["ChunkedScheduler", "ChunkPlan", "EngineStats", "KVPool",
+           "PoolExhausted", "PrefillTask", "Request", "ServingEngine",
+           "TickPlan", "greedy", "sample", "sample_token"]

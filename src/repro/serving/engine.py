@@ -37,11 +37,25 @@ Two cache layouts (``paged=``):
   docs/kv-cache.md), shrinking cache bytes and decode HBM traffic to
   ~0.52x the bf16-equivalent at int8.
 
+Two admission policies:
+
+- **admit-stall** (default): a popped request runs its whole prompt through
+  one monolithic prefill dispatch before anything else proceeds.
+- **chunked** (``chunked_prefill=True``): a Sarathi-style token-budget
+  scheduler (``serving.scheduler``) splits prompts into fixed-size chunks
+  and packs them with decode into each tick, so a long prompt never stalls
+  an active decoder beyond the budget. Prefill-from-position makes a
+  prefix-cache hit *skip* the shared compute (chunking starts at the first
+  non-shared token), and pool admission becomes chunk-granular with a
+  decode-headroom reserve + longest-idle eviction. See docs/scheduler.md.
+
 Phase latency accounting (vision / prefill / decode) is recorded per request
 and aggregated in ``EngineStats`` — the serving-side counterpart of the
 paper's Nsight phase decomposition — and survives the fusion: vision runs as
 its own jitted stage (``M.encode_vision`` feeding ``batch['prefix']``), and
-decode wall-time is attributed per tick.
+decode wall-time is attributed per tick. Per-request ``queue_s``/``ttft_s``
+and per-tick latency lists (``tick_s``/``decode_tick_s``, with p50/p99 in
+``phase_report()``) make scheduler jitter observable.
 """
 from __future__ import annotations
 
@@ -63,6 +77,7 @@ from repro.models.layers import ModelOptions
 from repro.models.stacks import cache_batch_axis, is_paged_leaf, is_scale_leaf
 from repro.serving import sampler as S
 from repro.serving.kv_pool import KVPool, PoolExhausted
+from repro.serving.scheduler import ChunkedScheduler, ChunkPlan, PrefillTask
 
 
 @dataclass
@@ -76,8 +91,11 @@ class Request:
     t_submit: float = 0.0
     t_prefill: float = 0.0
     t_done: float = 0.0
+    queue_s: float = 0.0               # submit -> prefill start (queue wait)
+    ttft_s: float = 0.0                # submit -> first token
     pages_used: int = 0                # paged engine: pages held at finish
     pages_shared: int = 0              # paged engine: prefix-cache hits
+    prefill_skipped: int = 0           # prompt positions skipped (prefix hit)
 
 
 @dataclass
@@ -104,36 +122,67 @@ class EngineStats:
     vision_time: float = 0.0
     prefill_time: float = 0.0
     decode_time: float = 0.0
+    prefill_tokens: int = 0     # prompt positions actually run through prefill
+    prefill_skipped: int = 0    # prompt positions skipped via prefix-cache hit
     pages_in_use: int = 0       # paged: current pool pages held by live slots
     pages_hwm: int = 0          # paged: high-water pages in use
     cache_bytes_hwm: int = 0    # paged: high-water KV bytes actually held
     prefix_hits: int = 0        # paged: pages reused via the prefix cache
+    # queue_s / ttft_s are per-*event* samples: one entry per admission
+    # (submit -> prefill start) and per prefill completion (submit -> first
+    # token). Without preemption that is exactly one entry per request; a
+    # preempted-and-retried request contributes an entry per attempt that
+    # reached the boundary (the Request's own fields hold the final values).
+    # prefill_tokens likewise counts prompt positions actually *executed* —
+    # a preempted prefill's re-run is real work and is counted again.
+    queue_s: List[float] = field(default_factory=list)
+    ttft_s: List[float] = field(default_factory=list)
+    tick_s: List[float] = field(default_factory=list)    # whole-tick wall
+    decode_tick_s: List[float] = field(default_factory=list)  # decode stage
+    tick_prefill_tokens: List[int] = field(default_factory=list)  # per tick:
+    # prompt positions prefilled inside that tick — the head-of-line metric
+    # (admit-stall pays a whole prompt in one tick; the scheduler's entry
+    # never exceeds its token budget)
 
     def phase_report(self) -> Dict[str, float]:
-        """Figure-2-style wall-time decomposition."""
-        return {"vision": self.vision_time, "prefill": self.prefill_time,
-                "decode": self.decode_time}
+        """Figure-2-style wall-time decomposition, plus decode-tick latency
+        percentiles (p50/p99 over the per-tick decode stage) so scheduler
+        jitter — a prefill chunk crowding the tick a decoder needed — is
+        observable, not just the aggregate mean."""
+        rep = {"vision": self.vision_time, "prefill": self.prefill_time,
+               "decode": self.decode_time}
+        if self.decode_tick_s:
+            rep["decode_tick_p50"] = float(np.percentile(self.decode_tick_s,
+                                                         50))
+            rep["decode_tick_p99"] = float(np.percentile(self.decode_tick_s,
+                                                         99))
+        return rep
 
 
 def _fused_tick(cfg: ModelConfig, opts: ModelOptions, K: int, eos: int,
                 temperature: float, top_k: int, stop_on_finish: bool,
                 params, tokens, caches, index, budget, done, key,
-                page_table=None):
+                max_steps, page_table=None):
     """Up to K decode steps on device. Per-slot carry: current token [B,1],
     cache position index [B], remaining budget [B], done [B]. Emitted tokens
     land in out [B,K] (each live slot fills a prefix of its row, length
     n_emit[s]). Exits early when every slot is done or — with
     ``stop_on_finish`` — as soon as any slot newly finishes, so the host can
-    refill it. ``page_table`` [B,npg] selects the paged cache layout (pages
-    for index..index+K-1 are pre-allocated by the host)."""
+    refill it. ``max_steps`` (dynamic scalar <= K) lets the chunked
+    scheduler cap the tick's decode depth to its token budget without
+    recompiling; K stays the compiled loop bound. ``page_table`` [B,npg]
+    selects the paged cache layout (pages for index..index+K-1 are
+    pre-allocated by the host)."""
     B = tokens.shape[0]
     out0 = jnp.full((B, K), -1, jnp.int32)
     n_emit0 = jnp.zeros((B,), jnp.int32)
     entry_done = done
+    cap = jnp.minimum(jnp.asarray(K, jnp.int32),
+                      jnp.asarray(max_steps, jnp.int32))
 
     def cond(c):
         step, _, _, _, _, done, _, _, _ = c
-        go = (step < K) & ~jnp.all(done)
+        go = (step < cap) & ~jnp.all(done)
         if stop_on_finish:
             go &= ~jnp.any(done & ~entry_done)
         return go
@@ -183,6 +232,24 @@ def _jit_vision(cfg: ModelConfig, opts: ModelOptions):
 
 
 @functools.lru_cache(maxsize=None)
+def _jit_prefill_chunk(cfg: ModelConfig, opts: ModelOptions, paged: bool):
+    """Chunked-prefill stage: one fixed-shape dispatch per chunk. The chunk
+    length is baked in by the embeds shape (jit retraces per shape, and the
+    scheduler always pads to ``chunk_size``); ``cache_index``/``n_valid``
+    are dynamic scalars so chunk *position* never recompiles. Caches are
+    donated — the engine rebinds the returned tree."""
+    if paged:
+        return jax.jit(
+            lambda p, e, c, i, nv, pt: M.prefill_chunk(
+                cfg, opts, p, e, c, i, n_valid=nv, page_table=pt),
+            donate_argnums=2)
+    return jax.jit(
+        lambda p, e, c, i, nv: M.prefill_chunk(
+            cfg, opts, p, e, c, i, n_valid=nv),
+        donate_argnums=2)
+
+
+@functools.lru_cache(maxsize=None)
 def _jit_tick(cfg: ModelConfig, opts: ModelOptions, tick_tokens: int,
               eos: int, temperature: float, top_k: int,
               stop_on_finish: bool):
@@ -199,12 +266,33 @@ class ServingEngine:
                  top_k: int = 0, seed: int = 0, stop_on_finish: bool = True,
                  paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None, prefix_cache: bool = True,
-                 kv_dtype: str = "bf16"):
+                 kv_dtype: str = "bf16", chunked_prefill: bool = False,
+                 chunk_size: int = 32, token_budget: int = 64,
+                 reserve_pages: Optional[int] = None):
         if tick_tokens < 1:
             raise ValueError(f"tick_tokens must be >= 1, got {tick_tokens}")
         if kv_quant.quant_dtype(kv_dtype) is not None and not paged:
             raise ValueError("kv_dtype quantization requires paged=True "
                              "(the page pool is the quantization boundary)")
+        if chunked_prefill:
+            if not fused:
+                raise ValueError("chunked_prefill requires the fused decode "
+                                 "path (fused=True)")
+            if opts.window_cache:
+                raise ValueError("chunked_prefill and window_cache ring "
+                                 "buffers are mutually exclusive (rings "
+                                 "don't support positioned prefill)")
+            if cfg.encoder is not None:
+                raise ValueError("chunked_prefill does not support "
+                                 "encoder-decoder models")
+            if not all(cfg.is_attn_layer(i) for i in range(cfg.num_layers)):
+                raise ValueError("chunked_prefill requires attention-only "
+                                 "decoders (SSM prefill state is not "
+                                 "chunk-resumable yet)")
+            if paged and chunk_size % page_size:
+                raise ValueError(f"chunk_size {chunk_size} must divide by "
+                                 f"page_size {page_size} so chunk writes "
+                                 f"start page-aligned")
         self.cfg, self.opts, self.params = cfg, opts, params
         self.n_slots, self.max_seq, self.eos = n_slots, max_seq, eos
         self.prompt_len = prompt_len
@@ -243,6 +331,21 @@ class ServingEngine:
             self._bytes_per_page = 0
         self.stats = EngineStats()
         self.key = jax.random.PRNGKey(seed)
+        self.scheduler: Optional[ChunkedScheduler] = None
+        self.chunk_size, self.token_budget = chunk_size, token_budget
+        # slot -> last time it made progress (chunk ran / tokens emitted);
+        # the pool-aware admission policy evicts the longest-idle slot
+        self._last_active = np.zeros(n_slots, np.float64)
+        if chunked_prefill:
+            self.scheduler = ChunkedScheduler(chunk_size, token_budget)
+            self._prefill_chunk = _jit_prefill_chunk(cfg, opts, paged)
+        if paged:
+            # decode headroom: admission never grabs the last pages an
+            # in-flight decode needs to grow into (pool-aware policy)
+            if reserve_pages is None:
+                reserve_pages = n_slots if chunked_prefill else 0
+            self.pool.set_reserve(min(reserve_pages,
+                                      max(0, self.pool.num_pages - 2)))
 
         self._decode = _jit_decode(cfg, opts)
         self._prefill = _jit_prefill(cfg, opts, max_seq)
@@ -262,12 +365,18 @@ class ServingEngine:
     # -- queue -----------------------------------------------------------
     def submit(self, req: Request):
         req.t_submit = time.perf_counter()
-        self.queue.append(req)
+        if self.scheduler is not None:
+            self.scheduler.submit(req)
+        else:
+            self.queue.append(req)
 
     @property
     def pending(self) -> int:
-        """Requests not yet finished: queued + in-flight in slots."""
-        return len(self.queue) + sum(r is not None for r in self.slots)
+        """Requests not yet finished: queued + mid-prefill + in slots."""
+        n = len(self.queue) + sum(r is not None for r in self.slots)
+        if self.scheduler is not None:
+            n += self.scheduler.pending
+        return n
 
     # -- paged bookkeeping ------------------------------------------------
     def _prefix_page_keys(self, req: Request, n_prefix: int) -> List[bytes]:
@@ -305,19 +414,57 @@ class ServingEngine:
         st.prefix_hits = pool.prefix_hits
 
     def _page_table_device(self):
-        return jnp.asarray(self.pool.page_table)
+        """Page table for the *decode* tick. The fused tick issues cache
+        writes for every row, done or not — done rows sink into the null
+        page because ``free_slot`` nulled them. A mid-prefill slot's row is
+        live, though (its chunks need it), and the decode tick must not let
+        that slot's stale index clobber freshly-written chunk KV: its row is
+        nulled in the decode snapshot only."""
+        pt = self.pool.page_table
+        if self.scheduler is not None and self.scheduler.tasks:
+            pt = pt.copy()
+            for s in self.scheduler.tasks:
+                pt[s, :] = 0
+        return jnp.asarray(pt)
 
     def _preempt_slot(self, s: int):
         """Evict a live slot under pool pressure: free its pages and requeue
-        the request from scratch. Under greedy sampling the regenerated
+        the request from scratch. Works on both a decoding slot and a
+        mid-prefill slot (chunked mode) — in the latter case the in-flight
+        chunks are discarded; pages its first attempt registered in the
+        prefix cache may still be retained, so the retry can prefix-skip
+        what it already computed. Under greedy sampling the regenerated
         stream is identical (deterministic), so correctness is preserved;
         under temperature sampling the retried stream may differ (the
         degraded mode of an under-provisioned pool, not a crash)."""
-        req = self.slots[s]
         self.pool.free_slot(s)
-        self.slots[s] = None
-        req.out_tokens = []
-        self.queue.insert(0, req)
+        if self.slots[s] is not None:
+            req = self.slots[s]
+            self.slots[s] = None
+            req.out_tokens = []
+            if self.scheduler is not None:
+                self.scheduler.submit(req, front=True)
+            else:
+                self.queue.insert(0, req)
+        elif self.scheduler is not None:
+            self.scheduler.requeue_task(s)
+
+    def _evict_longest_idle(self, exclude: int = -1) -> bool:
+        """Pool-aware admission policy: instead of blindly deferring on
+        ``PoolExhausted``, preempt the longest-idle *queued-behind* slot —
+        a prefill task already stalled on pool pressure. Only stalled tasks
+        are candidates: decoders and progressing prefills free their pages
+        by finishing, so evicting them would trade guaranteed progress for
+        a restart (and two mutually-starved slots could ping-pong-evict
+        each other forever). Returns whether a victim was evicted."""
+        if self.scheduler is None:
+            return False
+        cands = [s for s, t in self.scheduler.tasks.items()
+                 if s != exclude and t.stalled]
+        if not cands:
+            return False
+        self._preempt_slot(min(cands, key=lambda s: self._last_active[s]))
+        return True
 
     def _ensure_pages(self, steps: int):
         """Pre-allocate pages covering every position the next tick may
@@ -354,7 +501,10 @@ class ServingEngine:
                     break
                 except PoolExhausted:
                     victims = [v for v in range(self.n_slots)
-                               if v != s and self.slots[v] is not None]
+                               if v != s
+                               and (self.slots[v] is not None
+                                    or (self.scheduler is not None
+                                        and v in self.scheduler.tasks))]
                     if not victims:
                         raise PoolExhausted(
                             f"KV pool too small for a single request "
@@ -362,29 +512,44 @@ class ServingEngine:
                     self._preempt_slot(max(
                         victims, key=lambda v: len(self.pool.slot_pages[v])))
             self.slots[s].pages_used = len(self.pool.slot_pages[s])
-        width = self.pool.pages_per_slot * self.n_slots
-        if kv_quant.quant_dtype(self.kv_dtype) is not None:
-            # pages a slot gained this call (growth and COW destinations;
-            # diffed against entry so pages appended by an ensure() that
-            # then raised are included too). Zero their scale rows *before*
-            # the COW copy below, which restores the destinations' scales.
-            fresh = sorted({p for s, held in held_before.items()
-                            if self.slots[s] is not None
-                            for p in self.pool.slot_pages[s]
-                            if p not in held})
-            if fresh:
-                ids = np.zeros(width, np.int32)   # 0-pads hit the null page
-                ids[:len(fresh)] = fresh
-                self.caches = _reset_page_scales(self.caches,
-                                                 jnp.asarray(ids))
-        if copies:
-            src = np.zeros(width, np.int32)
-            dst = np.zeros(width, np.int32)
-            for i, (a, b) in enumerate(copies):   # null->null pads are no-ops
-                src[i], dst[i] = a, b
-            self.caches = _copy_pages(self.caches, jnp.asarray(src),
-                                      jnp.asarray(dst))
+        # pages a slot gained this call (growth and COW destinations;
+        # diffed against entry so pages appended by an ensure() that
+        # then raised are included too). Scale rows are zeroed *before*
+        # the COW copy below, which restores the destinations' scales.
+        self._reset_fresh_scales(sorted(
+            {p for s, held in held_before.items()
+             if self.slots[s] is not None
+             for p in self.pool.slot_pages[s]
+             if p not in held}))
+        self._dispatch_copies(copies)
         self._update_cache_stats()
+
+    def _dispatch_copies(self, copies: List):
+        """Materialize copy-on-write (src, dst) page pairs with one jitted
+        gather/scatter (zero-padded pairs are null->null no-ops)."""
+        if not copies:
+            return
+        width = self.pool.pages_per_slot * self.n_slots
+        src = np.zeros(width, np.int32)
+        dst = np.zeros(width, np.int32)
+        for i, (a, b) in enumerate(copies):
+            src[i], dst[i] = a, b
+        self.caches = _copy_pages(self.caches, jnp.asarray(src),
+                                  jnp.asarray(dst))
+
+    def _clamped_budget(self, req: Request, pos: int) -> int:
+        """Clamp generation to cache capacity: decode writes at positions
+        pos..pos+budget-1, which must stay < max_seq in *both* layouts
+        (unclamped, each layout clamps its scatter differently and the
+        bit-equality contract breaks). Warns when the clamp bites."""
+        budget = min(req.max_tokens - 1, self.max_seq - pos)
+        if budget < req.max_tokens - 1:
+            warnings.warn(
+                f"request {req.uid}: max_tokens {req.max_tokens} "
+                f"exceeds cache capacity (prompt {pos} + budget > "
+                f"max_seq {self.max_seq}); clamping",
+                RuntimeWarning, stacklevel=2)
+        return budget
 
     def _finish_slot(self, s: int, now: float):
         req = self.slots[s]
@@ -426,6 +591,8 @@ class ServingEngine:
                     return
                 self.queue.pop(0)
                 t0 = time.perf_counter()
+                req.queue_s = t0 - req.t_submit
+                self.stats.queue_s.append(req.queue_s)
                 batch = {"tokens": jnp.asarray(req.prompt[None, :])}
                 if n_prefix:
                     prefix = self._vision(self.params,
@@ -440,18 +607,11 @@ class ServingEngine:
                 self.stats.prefill_syncs += 1
                 req.t_prefill = time.perf_counter()
                 self.stats.prefill_time += req.t_prefill - t0
+                self.stats.prefill_tokens += pos
+                req.ttft_s = req.t_prefill - req.t_submit
+                self.stats.ttft_s.append(req.ttft_s)
                 req.out_tokens.append(tok)
-                # clamp generation to cache capacity: decode writes at
-                # positions pos..pos+budget-1, which must stay < max_seq in
-                # *both* layouts (unclamped, each layout clamps its scatter
-                # differently and the bit-equality contract breaks)
-                budget = min(req.max_tokens - 1, self.max_seq - pos)
-                if budget < req.max_tokens - 1:
-                    warnings.warn(
-                        f"request {req.uid}: max_tokens {req.max_tokens} "
-                        f"exceeds cache capacity (prompt {pos} + budget > "
-                        f"max_seq {self.max_seq}); clamping",
-                        RuntimeWarning, stacklevel=3)
+                budget = self._clamped_budget(req, pos)
                 if tok == self.eos or req.max_tokens <= 1 or budget <= 0:
                     req.done = True
                     req.t_done = req.t_prefill
@@ -462,8 +622,13 @@ class ServingEngine:
                         pages, n_shared = self.pool.admit(s, pos, keys)
                     except PoolExhausted:
                         # can_admit() raced a cached-page eviction; defer
+                        # and roll the attempt's stats back too, so the
+                        # retry doesn't double-count this request
                         self.queue.insert(0, req)
                         req.out_tokens.pop()
+                        self.stats.queue_s.pop()
+                        self.stats.ttft_s.pop()
+                        self.stats.prefill_tokens -= pos
                         return
                     req.pages_used = len(pages)
                     req.pages_shared = n_shared
@@ -483,13 +648,22 @@ class ServingEngine:
                 self.budget[s] = budget
                 self.tokens[s, 0] = tok
                 self.slots[s] = req
+                self._last_active[s] = req.t_prefill
 
     # -- one engine tick ---------------------------------------------------
     def step(self) -> int:
         """Reference path: one decode step, one host sync per token."""
+        if self.scheduler is not None:
+            raise RuntimeError("chunked_prefill engines tick via "
+                               "step_fused()/run() (fused only)")
+        t_tick = time.perf_counter()
+        pf0 = self.stats.prefill_tokens
         self._admit()
         active = [s for s in range(self.n_slots) if self.slots[s] is not None]
         if not active:
+            self.stats.tick_prefill_tokens.append(
+                self.stats.prefill_tokens - pf0)
+            self.stats.tick_s.append(time.perf_counter() - t_tick)
             return 0
         pt = None
         if self.paged:
@@ -509,31 +683,53 @@ class ServingEngine:
         self.stats.device_steps += 1
         self.stats.tokens_decoded += len(active)
         self.stats.decode_time += now - t0
+        self.stats.decode_tick_s.append(now - t0)
         for s in active:
             req = self.slots[s]
             tok = int(nxt[s])
             req.out_tokens.append(tok)
+            self._last_active[s] = now
             self.index[s] += 1
             self.budget[s] -= 1
             if tok == self.eos or self.budget[s] <= 0:
                 self._finish_slot(s, now)
             else:
                 self.tokens[s, 0] = tok
+        self.stats.tick_prefill_tokens.append(
+            self.stats.prefill_tokens - pf0)
+        self.stats.tick_s.append(time.perf_counter() - t_tick)
         return len(active)
 
     def step_fused(self) -> int:
-        """Fused path: up to ``tick_tokens`` decode steps per host sync."""
+        """Fused path: up to ``tick_tokens`` decode steps per host sync.
+        With ``chunked_prefill`` the tick additionally packs prefill chunks
+        under the token budget (see ``_tick_chunked``)."""
+        if self.scheduler is not None:
+            return self._tick_chunked()
+        t_tick = time.perf_counter()
+        pf0 = self.stats.prefill_tokens
         self._admit()
+        emitted = self._decode_tick(self.tick_tokens)
+        self.stats.tick_prefill_tokens.append(
+            self.stats.prefill_tokens - pf0)
+        self.stats.tick_s.append(time.perf_counter() - t_tick)
+        return emitted
+
+    def _decode_tick(self, max_steps: int) -> int:
+        """The fused decode stage of one tick: up to ``max_steps`` (<= the
+        compiled ``tick_tokens`` bound) device steps, one host sync."""
         active = [s for s in range(self.n_slots) if self.slots[s] is not None]
         if not active:
             return 0
         pt = None
         if self.paged:
-            self._ensure_pages(self.tick_tokens)
+            self._ensure_pages(min(max_steps, self.tick_tokens))
             pt = self._page_table_device()
             # growth may have preempted a slot under pool pressure
             active = [s for s in range(self.n_slots)
                       if self.slots[s] is not None]
+            if not active:
+                return 0
         t0 = time.perf_counter()
         done0 = np.asarray([self.slots[s] is None
                             for s in range(self.n_slots)])
@@ -541,7 +737,8 @@ class ServingEngine:
          steps) = self._tick(
             self.params, jnp.asarray(self.tokens), self.caches,
             jnp.asarray(self.index), jnp.asarray(self.budget),
-            jnp.asarray(done0), self.key, pt)
+            jnp.asarray(done0), self.key,
+            jnp.asarray(max_steps, jnp.int32), pt)
         out_h, n_emit_h, idx_h, bud_h, done_h, tok_h, steps_h = \
             jax.device_get((out, n_emit, index, budget, done, tokens, steps))
         now = time.perf_counter()
@@ -549,6 +746,7 @@ class ServingEngine:
         self.stats.ticks += 1
         self.stats.device_steps += int(steps_h)
         self.stats.decode_time += now - t0
+        self.stats.decode_tick_s.append(now - t0)
         self.index = np.array(idx_h, np.int32)
         self.budget = np.array(bud_h, np.int32)
         self.tokens = np.array(tok_h, np.int32)
@@ -558,9 +756,268 @@ class ServingEngine:
             k = int(n_emit_h[s])
             req.out_tokens.extend(int(t) for t in out_h[s, :k])
             emitted += k
+            if k:
+                self._last_active[s] = now
             if done_h[s]:
                 self._finish_slot(s, now)
         self.stats.tokens_decoded += emitted
+        return emitted
+
+    # -- chunked-prefill scheduler mode ------------------------------------
+    def _reset_fresh_scales(self, fresh: List[int]):
+        """Quantized pools: zero the scale rows of pages just handed to a
+        slot, so the monotone-amax write policy starts clean instead of
+        inheriting a dead request's range (history-independence)."""
+        if not fresh or kv_quant.quant_dtype(self.kv_dtype) is None:
+            return
+        width = self.pool.pages_per_slot * self.n_slots
+        ids = np.zeros(width, np.int32)     # 0-pads hit the null page
+        ids[:len(fresh)] = fresh
+        self.caches = _reset_page_scales(self.caches, jnp.asarray(ids))
+
+    def _admit_chunked(self):
+        """Admission in scheduler mode: assign waiting requests to free
+        slots as *prefill tasks* (no prompt compute yet — chunks run under
+        the tick budget). Paged pools allocate chunk-granularly: shared
+        prefix pages plus the first chunk's pages now, the rest as chunks
+        arrive (``ensure``), so a long prompt doesn't lock down its whole
+        footprint before producing a single token. On a prefix-cache hit
+        chunking starts at the first non-shared token — capped one position
+        before the prompt end so the last-token logits are always computed —
+        and the skipped positions are never recomputed."""
+        sched = self.scheduler
+        for s in range(self.n_slots):
+            # inner loop: an eviction requeues its victim at the *front* of
+            # the waiting queue, so the head must be re-read before this
+            # slot admits (popping a stale head would drop the victim and
+            # double-admit the request behind it)
+            while (sched.waiting and self.slots[s] is None
+                   and s not in sched.tasks):
+                req = sched.waiting[0]
+                n_prefix = (self.cfg.vision.num_tokens
+                            if req.patches is not None and self._vision
+                            else 0)
+                total = n_prefix + len(req.prompt)
+                if total > self.max_seq:
+                    raise ValueError(
+                        f"request {req.uid}: prompt ({total} positions) "
+                        f"exceeds max_seq {self.max_seq}")
+                n_skip = 0
+                keys: List[bytes] = []
+                if self.paged:
+                    keys = self._prefix_page_keys(req, n_prefix)
+                    n_hit = self.pool.match_prefix(keys)
+                    # never skip the final position: its logits seed decode
+                    skip_pages = min(n_hit, (total - 1) // self.page_size)
+                    n_skip = skip_pages * self.page_size
+                    first_len = min(total, n_skip + self.chunk_size)
+                    need_total = min(
+                        total + (0 if req.max_tokens <= 1 else 1),
+                        self.max_seq)
+                    # structural sizing check (drain limit: everything else
+                    # eventually finishes and frees its pages, but the
+                    # request's own holdings — shared hits included — still
+                    # occupy capacity). Two ways a request can never
+                    # complete, each a raise-now instead of stall-forever:
+                    # absolute capacity must cover prompt + the first
+                    # decode page, and — when any prefill page must be
+                    # freshly allocated — the whole prompt footprint must
+                    # fit the admission side, which cannot touch the decode
+                    # headroom reserve (the decode page itself may).
+                    usable = self.pool.num_pages - 1
+                    prefill_pages = self.pool.num_pages_for(total)
+                    if (self.pool.num_pages_for(need_total) > usable
+                            or (prefill_pages - n_hit > 0 and prefill_pages
+                                > usable - self.pool.reserve)):
+                        raise PoolExhausted(
+                            f"KV pool ({usable} pages, {self.pool.reserve} "
+                            f"reserved) too small for request {req.uid} "
+                            f"({prefill_pages} prompt pages, "
+                            f"{n_hit} prefix-shared)")
+                    if not self.pool.can_admit(first_len, keys):
+                        in_flight = any(
+                            self.slots[v] is not None or v in sched.tasks
+                            for v in range(self.n_slots))
+                        if not in_flight:
+                            raise PoolExhausted(
+                                f"KV pool cannot admit request {req.uid} "
+                                f"with nothing in flight to free pages")
+                        # pool-aware policy: evict the longest-idle stalled
+                        # task and re-evaluate with the (possibly new) queue
+                        # head; with no stalled victim, defer — something
+                        # in flight is progressing and will free pages
+                        if not self._evict_longest_idle():
+                            return
+                        continue
+                    try:
+                        pages, n_shared = self.pool.admit(s, first_len, keys,
+                                                          register=False)
+                        # recomputed positions may land in shared pages when
+                        # the skip cap pulled below the hit run: COW them
+                        copies = self.pool.prepare_write(s, n_skip, total)
+                    except PoolExhausted:
+                        self.pool.free_slot(s)
+                        return
+                    req.pages_shared = n_shared
+                    self._reset_fresh_scales(list(pages[n_shared:])
+                                             + [d for _, d in copies])
+                    self._dispatch_copies(copies)
+                    self._update_cache_stats()
+                sched.waiting.pop(0)
+                t0 = time.perf_counter()
+                req.queue_s = t0 - req.t_submit
+                self.stats.queue_s.append(req.queue_s)
+                batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+                if n_prefix:
+                    if n_skip < n_prefix:
+                        prefix = self._vision(self.params,
+                                              jnp.asarray(req.patches[None]))
+                        prefix.block_until_ready()
+                        t1 = time.perf_counter()
+                        self.stats.vision_time += t1 - t0
+                        t0 = t1
+                    else:
+                        # the whole vision prefix is prefix-cache shared:
+                        # its KV already sits in pool pages, so the tower
+                        # run itself is skipped (chunks never read these
+                        # embedding rows)
+                        prefix = jnp.zeros((1, n_prefix, self.cfg.d_model),
+                                           jnp.float32)
+                    batch["prefix"] = prefix
+                embeds = M.embed_prompt(self.cfg, self.opts, self.params,
+                                        batch)
+                cache1 = (None if self.paged else
+                          M.init_caches(self.cfg, 1, self.max_seq,
+                                        jnp.float32, self.opts))
+                req.prefill_skipped = n_skip
+                self.stats.prefill_skipped += n_skip
+                sched.start_task(PrefillTask(req=req, slot=s, total=total,
+                                             n_skip=n_skip, embeds=embeds,
+                                             cache1=cache1, prefix_keys=keys,
+                                             t_start=t0))
+                self._last_active[s] = t0
+
+    def _run_chunk(self, cp: ChunkPlan):
+        """Execute one planned prefill chunk: grow pages to cover it (paged),
+        pad the embedding slice to the static chunk shape, dispatch the
+        jitted positioned prefill, and — on the final chunk — sample the
+        request's first token and flip the slot to decoding."""
+        task, s = cp.task, cp.task.slot
+        t0 = time.perf_counter()
+        if self.paged:
+            end = cp.start + cp.n_tok
+            held0 = set(self.pool.slot_pages[s])
+            stalled = False
+            try:
+                self.pool.ensure(s, end, use_reserve=False)
+            except PoolExhausted:
+                # admission-side growth must not eat decode headroom: mark
+                # the task stalled, try evicting another (longest-idle)
+                # stalled task, else wait — in-flight decoders/prefills
+                # free pages by finishing, and the stalled task retries
+                # (deprioritized) every tick
+                task.stalled = True
+                stalled = True
+                if self._evict_longest_idle(exclude=s):
+                    try:
+                        self.pool.ensure(s, end, use_reserve=False)
+                        stalled = False
+                    except PoolExhausted:
+                        pass
+            # scale-reset by diff against entry, not ensure()'s return: a
+            # raising ensure() keeps its partial growth on the slot, and
+            # those pages must lose their previous owner's scale rows even
+            # on the stall path (the next tick's retry won't see them as
+            # fresh again) — same invariant as _ensure_pages
+            self._reset_fresh_scales(sorted(
+                p for p in self.pool.slot_pages[s] if p not in held0))
+            if stalled:
+                return
+            pt_row = jnp.asarray(self.pool.page_table[s:s + 1])
+        emb = task.embeds
+        chunk = jnp.zeros((1, self.chunk_size, emb.shape[-1]), emb.dtype)
+        chunk = chunk.at[:, :cp.n_tok].set(
+            emb[:, cp.start:cp.start + cp.n_tok])
+        start = jnp.asarray(cp.start, jnp.int32)
+        n_valid = jnp.asarray(cp.n_tok, jnp.int32)
+        if self.paged:
+            logits, self.caches = self._prefill_chunk(
+                self.params, chunk, self.caches, start, n_valid, pt_row)
+            self.pool.register_prefix_pages(s, task.prefix_keys or (),
+                                            cp.start + cp.n_tok)
+            self._update_cache_stats()
+        else:
+            logits, task.cache1 = self._prefill_chunk(
+                self.params, chunk, task.cache1, start, n_valid)
+        task.pos = cp.start + cp.n_tok
+        task.stalled = False
+        self.stats.prefill_tokens += cp.n_tok
+        self._last_active[s] = time.perf_counter()
+        if task.pos >= task.total:
+            self._finish_prefill(task, logits)
+        self.stats.prefill_time += time.perf_counter() - t0
+
+    def _finish_prefill(self, task: PrefillTask, logits):
+        """Last chunk done: sample the first token (TTFT boundary) from the
+        chunk's last-valid-position logits [B,1,V] and either finish the
+        request outright (EOS / max_tokens<=1 / no cache headroom) or hand
+        the slot to the decode stage."""
+        req, s = task.req, task.slot
+        pos = task.total
+        tok = int(self._sample_host(logits)[0])
+        self.stats.prefill_syncs += 1
+        now = time.perf_counter()
+        req.t_prefill = now
+        req.ttft_s = now - req.t_submit
+        self.stats.ttft_s.append(req.ttft_s)
+        req.out_tokens.append(tok)
+        budget = self._clamped_budget(req, pos)
+        self.scheduler.finish_task(s)
+        if tok == self.eos or req.max_tokens <= 1 or budget <= 0:
+            req.done = True
+            req.t_done = now
+            if self.paged:
+                req.pages_used = len(self.pool.slot_pages[s])
+                self.pool.free_slot(s)
+                self._update_cache_stats()
+            self.finished.append(req)
+            return
+        if self.paged:
+            req.pages_used = len(self.pool.slot_pages[s])
+        else:
+            self.caches = _scatter_slot(self.caches, task.cache1, s)
+            task.cache1 = None
+        self.index[s] = pos
+        self.budget[s] = budget
+        self.tokens[s, 0] = tok
+        self.slots[s] = req
+        self._last_active[s] = now
+
+    def _tick_chunked(self) -> int:
+        """One scheduler tick: admit waiting requests into prefill tasks,
+        pack chunks + decode under the token budget, run the chunks, then
+        the (budget-capped) fused decode stage. See docs/scheduler.md for
+        the tick anatomy."""
+        t_tick = time.perf_counter()
+        pf0 = self.stats.prefill_tokens
+        sched = self.scheduler
+        self._admit_chunked()
+        n_active = sum(r is not None for r in self.slots)
+        plan = sched.plan_tick(n_active, self.tick_tokens)
+        for cp in plan.chunks:
+            if sched.tasks.get(cp.task.slot) is not cp.task:
+                continue    # finished or preempted earlier this tick
+            if cp.task.pos != cp.start:
+                continue    # an earlier chunk of this task stalled
+            self._run_chunk(cp)
+        emitted = 0
+        if n_active:
+            emitted = self._decode_tick(plan.decode_steps)
+        elif plan.chunks:
+            self.stats.ticks += 1
+        self.stats.tick_prefill_tokens.append(
+            self.stats.prefill_tokens - pf0)
+        self.stats.tick_s.append(time.perf_counter() - t_tick)
         return emitted
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
@@ -573,10 +1030,12 @@ class ServingEngine:
             step()
             ticks += 1
         if self.pending:
+            queued = (len(self.scheduler.waiting) if self.scheduler
+                      else len(self.queue))
             warnings.warn(
                 f"ServingEngine.run: tick budget ({max_ticks}) exhausted "
                 f"with {self.pending} requests pending "
-                f"({len(self.queue)} queued, "
+                f"({queued} queued, "
                 f"{sum(r is not None for r in self.slots)} in flight)",
                 RuntimeWarning, stacklevel=2)
         return self.finished

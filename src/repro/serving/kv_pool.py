@@ -97,6 +97,7 @@ class KVPool:
         self._hash_to_page: Dict[bytes, int] = {}
         self._page_hash: Dict[int, bytes] = {}
         self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref==0
+        self.reserve = 0                           # decode-headroom pages
         # stats
         self.prefix_hits = 0                       # pages reused via prefix cache
         self.pages_hwm = 0                         # high-water pages in use
@@ -122,15 +123,36 @@ class KVPool:
         return len(self.slot_pages[slot]) * self.page_size
 
     # -- allocation core ---------------------------------------------------
-    def _alloc(self) -> int:
+    def set_reserve(self, n_pages: int):
+        """Reserve ``n_pages`` of decode headroom: admission-side allocation
+        (``admit`` / ``ensure(use_reserve=False)``) refuses to dip into the
+        last ``n_pages`` of supply, so in-flight decodes can always grow
+        into their next page instead of deadlocking behind a fresh prompt
+        that grabbed the final free page. Decode-side growth and COW pass
+        ``use_reserve=True`` and may consume the reserve."""
+        if n_pages < 0 or n_pages > self.num_pages - 1:
+            raise ValueError(f"reserve {n_pages} out of range "
+                             f"(pool has {self.num_pages - 1} pages)")
+        self.reserve = n_pages
+
+    def _supply(self, use_reserve: bool) -> int:
+        """Pages allocatable right now (free list + reclaimable cached),
+        minus the decode-headroom reserve for admission-side callers."""
+        supply = len(self._free) + len(self._cached)
+        return supply if use_reserve else supply - self.reserve
+
+    def _alloc(self, use_reserve: bool = True) -> int:
+        if self._supply(use_reserve) <= 0:
+            raise PoolExhausted(
+                f"KV pool exhausted: {self.num_pages - 1} pages, "
+                f"{self._supply(True)} allocatable, "
+                f"reserve {self.reserve} "
+                f"({'decode' if use_reserve else 'admission'} side)")
         if self._free:
             pid = self._free.pop()
-        elif self._cached:
+        else:
             pid, _ = self._cached.popitem(last=False)   # evict oldest
             self._drop_hash(pid)
-        else:
-            raise PoolExhausted(
-                f"KV pool exhausted: {self.num_pages - 1} pages all in use")
         self.refcount[pid] = 1
         self.pages_hwm = max(self.pages_hwm, self.pages_in_use)
         return pid
@@ -181,19 +203,40 @@ class KVPool:
             n_shared += 1
             if self.refcount[pid] == 0:
                 shared_cached += 1   # a hit revives it: not reclaimable too
-        supply = len(self._free) + len(self._cached) - shared_cached
+        supply = self._supply(use_reserve=False) - shared_cached
         return n_pages - n_shared <= supply
 
+    def match_prefix(self, prefix_keys: Sequence[bytes]) -> int:
+        """Leading run of prefix digests already registered in the prefix
+        cache — the pages a matching request can *share* (and, in the
+        chunked-prefill engine, skip recomputing: prefill starts at the
+        first non-shared token). Read-only; prefix-closed digests make the
+        leading-run check sufficient."""
+        n = 0
+        for key in prefix_keys:
+            if key not in self._hash_to_page:
+                break
+            n += 1
+        return n
+
     def admit(self, slot: int, seq_len: int,
-              prefix_keys: Sequence[bytes] = ()) -> Tuple[List[int], int]:
+              prefix_keys: Sequence[bytes] = (),
+              register: bool = True) -> Tuple[List[int], int]:
         """Allocate pages covering ``seq_len`` positions for ``slot``.
 
         ``prefix_keys`` are prefix-closed digests for each *full* page of
         the prompt (key i covers positions [0, (i+1)*page_size)). A leading
         run of keys already in the prefix cache is shared (refcount bump, no
-        new pages); everything else is freshly allocated and the fresh full
-        pages are registered so later requests can hit them.
+        new pages); everything else is freshly allocated and — with
+        ``register`` (the monolithic-prefill default, where the caller
+        scatters all prompt KV before anything else runs) — the fresh full
+        pages are registered so later requests can hit them. The chunked
+        engine passes ``register=False`` and registers pages via
+        ``register_prefix_pages`` only after their chunk is actually
+        written, so a digest can never resolve to a page whose KV does not
+        exist yet.
 
+        Admission-side: never dips into the decode-headroom reserve.
         Atomic: on PoolExhausted, nothing is retained. Returns
         (page ids, n_shared).
         """
@@ -214,9 +257,9 @@ class KVPool:
             n_shared += 1
         try:
             for i in range(n_shared, n_pages):
-                pid = self._alloc()
+                pid = self._alloc(use_reserve=False)
                 pages.append(pid)
-                if i < n_full and i < len(prefix_keys):
+                if register and i < n_full and i < len(prefix_keys):
                     self._hash_to_page[prefix_keys[i]] = pid
                     self._page_hash[pid] = prefix_keys[i]
         except PoolExhausted:
@@ -235,22 +278,51 @@ class KVPool:
         self._sync_table_row(slot)
         return pages, n_shared
 
-    def ensure(self, slot: int, length: int) -> List[int]:
+    def ensure(self, slot: int, length: int,
+               use_reserve: bool = True) -> List[int]:
         """Grow ``slot`` to cover ``length`` positions (capped at slot
         capacity). Returns the freshly allocated page ids. Raises
         ``PoolExhausted`` with the slot partially grown — already-appended
         pages stay owned by the slot (they are valid growth, not a broken
         transaction), so a retry after the caller frees pressure continues
-        where this call stopped."""
+        where this call stopped. ``use_reserve=False`` marks admission-side
+        growth (chunked prefill) that must not eat the decode headroom;
+        the default is decode-side growth, which may."""
         length = min(length, self.pages_per_slot * self.page_size)
         fresh: List[int] = []
         while self.slot_len_capacity(slot) < length:
-            pid = self._alloc()
+            pid = self._alloc(use_reserve=use_reserve)
             self.slot_pages[slot].append(pid)
             fresh.append(pid)
         if fresh:
             self._sync_table_row(slot)
         return fresh
+
+    def register_prefix_pages(self, slot: int,
+                              prefix_keys: Sequence[bytes],
+                              n_written: int) -> int:
+        """Register the slot's full prompt pages whose KV has now been
+        written (chunked prefill calls this after each chunk lands,
+        ``n_written`` = prompt positions written so far). Only pages that
+        carry no hash yet are registered — shared (hit) pages already have
+        one — and a digest is never re-pointed away from a live page, so
+        the prefix-closed invariant (``_hash_to_page`` only names
+        written-KV pages) holds at every tick boundary. Returns how many
+        pages were newly registered."""
+        pages = self.slot_pages[slot]
+        n = 0
+        for i in range(min(n_written // self.page_size, len(prefix_keys),
+                           len(pages))):
+            pid = pages[i]
+            if pid in self._page_hash:
+                continue
+            key = prefix_keys[i]
+            if key in self._hash_to_page:
+                continue        # another slot registered this digest first
+            self._hash_to_page[key] = pid
+            self._page_hash[pid] = key
+            n += 1
+        return n
 
     def prepare_write(self, slot: int, start: int,
                       end: int) -> List[Tuple[int, int]]:

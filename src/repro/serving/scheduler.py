@@ -1,0 +1,187 @@
+"""Continuous-batching scheduler: chunked prefill under a per-tick token
+budget (Sarathi-style), with prefill-from-position for prefix-cache hits.
+
+The paper's bottleneck analysis makes decode ticks the scarce resource: the
+memory-bound action-generation phase is where end-to-end latency lives, so
+every tick an active decoder spends stalled behind a monolithic prompt
+prefill is lost control-frequency budget. The legacy engine admits with
+"admit, stall, decode": a new request runs its *whole* prompt through one
+prefill dispatch while every live slot waits. This module replaces that with
+a token-budget tick:
+
+- Every prompt is split into fixed-size **prefill chunks** (``chunk_size``
+  tokens, the jit-stable dispatch shape; a partial final chunk is padded and
+  masked via ``n_valid``).
+- Each tick packs work under ``token_budget`` tokens: active decode slots
+  are served first (one token per slot per decode step — they are the
+  latency-critical phase), then the remaining budget is given to prefill
+  chunks FCFS. A long prompt therefore never blocks an active decoder for
+  more than the token budget — it is spread over as many ticks as it needs.
+- On a prefix-cache hit the request's first chunk starts at the first
+  non-shared token (**prefill-from-position**): the shared pages' KV is
+  already in the pool, chunks attend to it through the page table, and the
+  shared fraction of prefill compute is genuinely skipped — not just its
+  storage deduplicated.
+
+This module is the *policy*: pure host-side bookkeeping with no jax
+dependency, unit-testable without a model. The mechanism — running chunks,
+scattering pages, sampling the first token — lives in
+``serving.engine.ServingEngine`` (``chunked_prefill=True``). Budget math and
+tick anatomy are documented in docs/scheduler.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+@dataclass
+class PrefillTask:
+    """One request mid-prefill: admitted to a slot, pages allocated up to
+    the next chunk, ``pos`` .. ``total`` still to run. ``n_skip`` prompt
+    positions were served from the prefix cache and are never recomputed."""
+    req: Any                    # serving.engine.Request
+    slot: int
+    total: int                  # n_prefix + len(prompt) positions
+    n_skip: int = 0             # positions skipped via prefix-cache hit
+    pos: int = 0                # next position to prefill (starts at n_skip)
+    seq: int = 0                # admission order (FCFS tiebreak)
+    embeds: Any = None          # [1, total, d] prompt embeddings (engine)
+    cache1: Any = None          # dense engines: batch-1 prefill cache
+    prefix_keys: Any = None     # paged engines: prefix-closed page digests
+    t_start: float = 0.0        # prefill start (queue_s boundary)
+    stalled: bool = False       # pool pressure on last attempt; cleared by
+    #                             the next successful chunk. Stalled tasks
+    #                             are planned last (healthy work first) and
+    #                             are the only admission-side eviction
+    #                             victims — a stalled task is by definition
+    #                             queued-behind, while decoders and
+    #                             progressing tasks free pages by finishing
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.pos
+
+
+@dataclass
+class ChunkPlan:
+    """One prefill-chunk dispatch: ``n_tok`` valid tokens of ``task``'s
+    prompt starting at position ``start`` (padded to the engine's static
+    chunk shape)."""
+    task: PrefillTask
+    start: int
+    n_tok: int
+
+
+@dataclass
+class TickPlan:
+    """What one engine tick executes: prefill chunks, then up to
+    ``decode_steps`` fused decode steps for the active slots."""
+    chunks: List[ChunkPlan] = field(default_factory=list)
+    decode_steps: int = 0
+    budget_used: int = 0
+
+
+class ChunkedScheduler:
+    """Token-budget continuous-batching policy.
+
+    Budget math per tick (``plan_tick``):
+
+    1. **Decode first.** ``n_active`` decoding slots reserve
+       ``n_active * decode_steps`` tokens, with
+       ``decode_steps = clamp(token_budget // n_active, 1, tick_tokens)``.
+       Active decoders always advance at least one step — prefill pressure
+       can slow decode to one token per tick but never stall it — and when
+       the budget is generous they keep the engine's full fused-tick depth.
+    2. **Chunks fill the remainder.** In-flight prefills (FCFS by admission
+       order) take chunks of ``min(chunk_size, remaining prompt, remaining
+       budget)`` valid tokens until the budget is spent. A task may receive
+       several chunks in one tick on an idle engine; with zero leftover
+       budget it simply waits (decoders free budget when they finish).
+    3. **Progress floor.** With no active decoders the whole budget (>= 1
+       token, enforced at construction) goes to prefill, so the head task
+       always gets a chunk — even ``token_budget < chunk_size`` degrades to
+       slow prefill, not deadlock.
+
+    The scheduler owns the waiting queue and the in-flight task table; the
+    engine owns slots, pools, and device state. ``stalled`` tasks (pool
+    pressure on their last attempt) are planned after healthy tasks and
+    retried every tick until pages free up or they are evicted.
+    """
+
+    def __init__(self, chunk_size: int, token_budget: int):
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, "
+                             f"got {token_budget}")
+        self.chunk_size = chunk_size
+        self.token_budget = token_budget
+        self.waiting: List[Any] = []            # Requests not yet admitted
+        self.tasks: Dict[int, PrefillTask] = {}  # slot -> in-flight prefill
+        self._seq = 0
+
+    # -- queue / task lifecycle -------------------------------------------
+    def submit(self, req, front: bool = False):
+        if front:
+            self.waiting.insert(0, req)
+        else:
+            self.waiting.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.waiting) + len(self.tasks)
+
+    def start_task(self, task: PrefillTask) -> PrefillTask:
+        """Admit a request into a slot: it now competes for chunk budget."""
+        assert task.slot not in self.tasks, f"slot {task.slot} mid-prefill"
+        task.seq = self._seq
+        task.pos = task.n_skip
+        self._seq += 1
+        self.tasks[task.slot] = task
+        return task
+
+    def finish_task(self, slot: int) -> PrefillTask:
+        """Prefill complete (or request finished at prefill): drop the
+        task; the engine flips the slot to decoding."""
+        return self.tasks.pop(slot)
+
+    def requeue_task(self, slot: int) -> Optional[PrefillTask]:
+        """Preemption: the slot's in-flight prefill is abandoned and its
+        request goes back to the *front* of the waiting queue (it has
+        seniority). Written chunks are discarded — on re-admission the
+        prefix cache may still serve the pages the first attempt
+        registered, so the retry can be cheaper than the original."""
+        task = self.tasks.pop(slot, None)
+        if task is not None:
+            self.submit(task.req, front=True)
+        return task
+
+    # -- the per-tick policy ----------------------------------------------
+    def plan_tick(self, n_active: int, tick_tokens: int) -> TickPlan:
+        """Pack one tick: decode reservation first, then prefill chunks
+        FCFS under what is left of ``token_budget``.
+
+        The budget bounds *planned* work. A prefill that completes during
+        this tick's chunk stage joins the same tick's decode stage (the
+        engine re-reads the active set), adding up to ``decode_steps``
+        unplanned decode tokens — deliberate: delaying that slot one tick
+        would cost first-token latency to enforce an accounting nicety."""
+        plan = TickPlan()
+        if n_active:
+            plan.decode_steps = max(
+                1, min(tick_tokens, self.token_budget // n_active))
+        left = self.token_budget - n_active * plan.decode_steps
+        # stalled tasks go last: healthy work first, but they still retry
+        # every tick (their stall may clear the moment a decoder finishes)
+        for task in sorted(self.tasks.values(),
+                           key=lambda t: (t.stalled, t.seq)):
+            pos = task.pos
+            while left > 0 and pos < task.total:
+                n = min(self.chunk_size, task.total - pos, left)
+                plan.chunks.append(ChunkPlan(task, pos, n))
+                pos += n
+                left -= n
+        plan.budget_used = (n_active * plan.decode_steps
+                            + sum(c.n_tok for c in plan.chunks))
+        return plan

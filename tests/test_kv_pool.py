@@ -611,3 +611,69 @@ def test_quantized_null_page_stays_zero(opts):
         elif is_paged_leaf(path):
             p0 = leaf[:, 0] if leaf.ndim == 5 else leaf[0]
             assert int(jnp.abs(p0.astype(jnp.int32)).max()) == 0, path
+
+
+# ---------------------------------------------------------------------------
+# decode-headroom reserve + chunk-granular prefix registration
+# ---------------------------------------------------------------------------
+
+def test_reserve_accounting_admission_vs_decode():
+    """set_reserve fences the last pages off from admission-side allocation
+    (admit / ensure(use_reserve=False)) while decode-side growth may still
+    consume them — the pool-aware policy that keeps in-flight decodes from
+    deadlocking behind fresh prompts."""
+    p = _pool(num_pages=6, page_size=4, n_slots=2, pages_per_slot=5)  # 5 usable
+    p.set_reserve(2)
+    pages, _ = p.admit(0, seq_len=12)           # 3 pages: exactly the supply
+    assert len(pages) == 3
+    with pytest.raises(PoolExhausted):
+        p.admit(1, seq_len=4)                   # admission blocked by reserve
+    assert p.pages_in_use == 3                  # atomic: nothing leaked
+    with pytest.raises(PoolExhausted):
+        p.ensure(0, 16, use_reserve=False)      # prefill growth blocked too
+    assert p.ensure(0, 16) and len(p.slot_pages[0]) == 4  # decode-side OK
+    assert p.ensure(0, 20) and len(p.slot_pages[0]) == 5  # decode eats reserve
+    with pytest.raises(PoolExhausted):
+        p.ensure(1, 4)                          # genuinely empty now
+    p.free_slot(0)
+    assert p.pages_in_use == 0
+
+
+def test_reserve_respected_by_can_admit():
+    p = _pool(num_pages=6, page_size=4, n_slots=2, pages_per_slot=4)
+    assert p.can_admit(16)                      # 4 pages of 5 usable
+    p.set_reserve(2)
+    assert not p.can_admit(16)                  # only 3 admissible now
+    assert p.can_admit(12)
+    with pytest.raises(ValueError):
+        p.set_reserve(-1)
+    with pytest.raises(ValueError):
+        p.set_reserve(6)                        # > usable pages
+
+
+def test_match_prefix_counts_leading_run():
+    p = _pool()
+    keys = [b"a", b"b", b"c"]
+    assert p.match_prefix(keys) == 0
+    p.admit(0, seq_len=8, prefix_keys=keys[:2])  # registers 2 full pages
+    assert p.match_prefix(keys) == 2
+    assert p.match_prefix([b"x", b"b"]) == 0     # prefix-closed: leading only
+
+
+def test_admit_register_false_defers_registration():
+    """Chunked admission must not register digests before the pages' KV is
+    written: admit(register=False) leaves the prefix cache untouched and
+    register_prefix_pages only registers pages the written span covers."""
+    p = _pool()
+    keys = [b"p0", b"p1"]
+    pages, shared = p.admit(0, seq_len=10, prefix_keys=keys,
+                            register=False)
+    assert shared == 0 and p.match_prefix(keys) == 0
+    assert p.register_prefix_pages(0, keys, n_written=5) == 1  # page 0 only
+    assert p.match_prefix(keys) == 1
+    assert p.register_prefix_pages(0, keys, n_written=10) == 1  # now page 1
+    assert p.match_prefix(keys) == 2
+    # idempotent, and never re-points an existing digest
+    assert p.register_prefix_pages(0, keys, n_written=10) == 0
+    b, shared_b = p.admit(1, seq_len=10, prefix_keys=keys)
+    assert shared_b == 2 and b[:2] == pages[:2]

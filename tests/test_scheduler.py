@@ -1,0 +1,258 @@
+"""Chunked-prefill scheduler: policy math (pure, no model), engine-level
+bit-equality against monolithic prefill, prefix-skip correctness, and the
+preempt/requeue interaction with in-flight chunks."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+from repro.serving import Request, ServingEngine
+from repro.serving.scheduler import ChunkedScheduler, PrefillTask
+from conftest import reduced_params
+
+
+def _streams(cfg, opts, params, reqs, *, n_slots=2, max_seq=64, **kw):
+    eng = ServingEngine(cfg, opts, params, n_slots=n_slots, max_seq=max_seq,
+                        eos=-999, fused=True, tick_tokens=4, **kw)
+    for i, (prompt, max_tokens) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=prompt.copy(),
+                           max_tokens=max_tokens))
+    done = eng.run(max_ticks=2_000)
+    assert len(done) == len(reqs)
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+# ---------------------------------------------------------------------------
+# policy unit tests (no model)
+# ---------------------------------------------------------------------------
+
+def _task(slot, total, n_skip=0):
+    return PrefillTask(req=None, slot=slot, total=total, n_skip=n_skip)
+
+
+def test_plan_decode_reserved_before_prefill():
+    """Starvation guarantee: active decoders get their reservation first and
+    a long prompt can never take more than the leftover budget per tick."""
+    sched = ChunkedScheduler(chunk_size=16, token_budget=48)
+    sched.start_task(_task(slot=0, total=400))
+    plan = sched.plan_tick(n_active=2, tick_tokens=8)
+    assert plan.decode_steps == 8              # min(tick_tokens, 48 // 2)
+    chunk_tokens = sum(c.n_tok for c in plan.chunks)
+    assert chunk_tokens == 48 - 2 * 8          # prefill only gets the rest
+    assert plan.budget_used <= 48
+
+
+def test_plan_decode_always_advances():
+    """Even a budget smaller than the active batch decodes one step."""
+    sched = ChunkedScheduler(chunk_size=16, token_budget=4)
+    sched.start_task(_task(slot=0, total=100))
+    plan = sched.plan_tick(n_active=6, tick_tokens=8)
+    assert plan.decode_steps == 1
+    assert not plan.chunks                     # nothing left for prefill
+
+
+def test_plan_progress_floor_without_decoders():
+    """token_budget < chunk_size on an idle engine still prefills."""
+    sched = ChunkedScheduler(chunk_size=32, token_budget=8)
+    sched.start_task(_task(slot=0, total=100))
+    plan = sched.plan_tick(n_active=0, tick_tokens=8)
+    assert len(plan.chunks) == 1 and plan.chunks[0].n_tok == 8
+
+
+def test_plan_fcfs_and_partial_final_chunk():
+    sched = ChunkedScheduler(chunk_size=16, token_budget=64)
+    a = sched.start_task(_task(slot=1, total=21))    # admitted first
+    b = sched.start_task(_task(slot=0, total=40))
+    plan = sched.plan_tick(n_active=0, tick_tokens=8)
+    # task a: 16 + 5 (partial), then task b with what's left (64-21=43)
+    assert [(c.task.slot, c.start, c.n_tok) for c in plan.chunks[:2]] == \
+        [(1, 0, 16), (1, 16, 5)]
+    assert plan.chunks[2].task is b
+    assert sum(c.n_tok for c in plan.chunks) <= 64
+    # planning must not mutate task positions
+    assert a.pos == 0 and b.pos == 0
+
+
+def test_plan_deprioritizes_stalled_tasks():
+    """A stalled task still retries every tick, but healthy tasks get the
+    budget first (evicting a progressing task would restart guaranteed
+    work, so stalled ones wait their turn instead)."""
+    sched = ChunkedScheduler(chunk_size=16, token_budget=32)
+    a = sched.start_task(_task(slot=0, total=64))
+    b = sched.start_task(_task(slot=1, total=64))
+    a.stalled = True
+    plan = sched.plan_tick(n_active=0, tick_tokens=8)
+    assert plan.chunks and all(c.task is b for c in plan.chunks)
+    b.stalled = True                 # both stalled: FCFS retry order
+    plan = sched.plan_tick(n_active=0, tick_tokens=8)
+    assert plan.chunks[0].task is a
+
+
+def test_requeue_task_goes_to_front():
+    sched = ChunkedScheduler(chunk_size=16, token_budget=32)
+    sched.submit("r1")
+    task = sched.start_task(PrefillTask(req="r0", slot=0, total=32))
+    task.pos = 16                               # chunks already in flight
+    sched.requeue_task(0)
+    assert sched.waiting == ["r0", "r1"]        # seniority preserved
+    assert 0 not in sched.tasks
+
+
+def test_prefix_skip_starts_at_first_nonshared_token():
+    t = _task(slot=0, total=64, n_skip=48)
+    sched = ChunkedScheduler(chunk_size=16, token_budget=64)
+    sched.start_task(t)
+    assert t.pos == 48 and t.remaining == 16
+    plan = sched.plan_tick(n_active=0, tick_tokens=8)
+    assert plan.chunks[0].start == 48 and plan.chunks[0].n_tok == 16
+
+
+# ---------------------------------------------------------------------------
+# engine-level: bit-equality and edge cases
+# ---------------------------------------------------------------------------
+
+def test_chunked_matches_monolithic_dense_and_paged(opts):
+    """Chunk size that divides nothing (5 into prompts of 13/9/21) must
+    still produce greedy streams bit-identical to the admit-stall
+    monolithic baseline, on both layouts."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab_size, l, dtype=np.int32), m)
+            for l, m in [(13, 7), (9, 5), (21, 8), (5, 6)]]
+    base, _ = _streams(cfg, opts, params, reqs)
+    dense, e_d = _streams(cfg, opts, params, reqs, chunked_prefill=True,
+                          chunk_size=5, token_budget=20)
+    assert dense == base
+    paged, e_p = _streams(cfg, opts, params, reqs, chunked_prefill=True,
+                          chunk_size=8, token_budget=20, paged=True,
+                          page_size=8)
+    assert paged == base
+    total = sum(len(p) for p, _ in reqs)
+    for e in (e_d, e_p):
+        assert e.stats.prefill_tokens + e.stats.prefill_skipped == total
+        assert len(e.stats.ttft_s) == len(reqs)
+        assert len(e.stats.queue_s) == len(reqs)
+
+
+def test_chunk_larger_than_prompt_single_dispatch(opts):
+    """chunk_size > prompt: one padded chunk, still bit-identical."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, cfg.vocab_size, 7, dtype=np.int32), 5)]
+    base, _ = _streams(cfg, opts, params, reqs, n_slots=1)
+    ch, eng = _streams(cfg, opts, params, reqs, n_slots=1,
+                       chunked_prefill=True, chunk_size=32, token_budget=32)
+    assert ch == base and eng.stats.prefill_tokens == 7
+
+
+def test_prefix_hit_covering_entire_prompt(opts):
+    """A full-prompt prefix hit skips everything except the final page
+    (whose last-position logits seed decoding) and still emits the same
+    stream as the first run."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)  # 2 pages
+    eng = ServingEngine(cfg, opts, params, n_slots=2, max_seq=64, eos=-999,
+                        fused=True, tick_tokens=4, chunked_prefill=True,
+                        chunk_size=8, token_budget=24, paged=True,
+                        page_size=8)
+    eng.submit(Request(uid=0, prompt=prompt.copy(), max_tokens=5))
+    eng.run()
+    run1 = eng.stats.prefill_tokens
+    eng.submit(Request(uid=1, prompt=prompt.copy(), max_tokens=5))
+    done = eng.run()
+    r0, r1 = sorted(done, key=lambda r: r.uid)
+    assert r1.out_tokens == r0.out_tokens
+    assert run1 == 16                          # first run computed all of it
+    assert r1.prefill_skipped == 8             # all but the final page
+    assert eng.stats.prefill_tokens == 16 + 8  # repeat ran only 8 tokens
+    assert r1.pages_shared >= 1
+
+
+def test_preempt_requeue_with_inflight_chunks(opts):
+    """A pool too small for everyone forces mid-prefill preemption; the
+    requeued request restarts (possibly prefix-skipping its own first
+    attempt's pages) and every stream still matches the ample-pool run."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, cfg.vocab_size, 20, dtype=np.int32), 8),
+            (rng.integers(0, cfg.vocab_size, 24, dtype=np.int32), 6),
+            (rng.integers(0, cfg.vocab_size, 12, dtype=np.int32), 5)]
+    base, _ = _streams(cfg, opts, params, reqs, n_slots=3)
+    tiny, eng = _streams(cfg, opts, params, reqs, n_slots=3,
+                         chunked_prefill=True, chunk_size=8, token_budget=16,
+                         paged=True, page_size=8, num_pages=9,
+                         reserve_pages=1)
+    assert tiny == base
+    assert eng.pool.pages_in_use == 0          # all pages returned
+
+
+def test_decode_tick_does_not_clobber_inflight_prefill(opts):
+    """Regression: the fused tick writes KV for every slot row, done or
+    not; a mid-prefill slot's page-table row must be nulled in the decode
+    snapshot or stale decode indices overwrite freshly-written chunk KV."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(4)
+    # one decoding request, then a second arrives so its chunks interleave
+    # with the first one's decode ticks
+    reqs = [(rng.integers(0, cfg.vocab_size, 6, dtype=np.int32), 12),
+            (rng.integers(0, cfg.vocab_size, 24, dtype=np.int32), 5)]
+    base, _ = _streams(cfg, opts, params, reqs)
+    ch, _ = _streams(cfg, opts, params, reqs, chunked_prefill=True,
+                     chunk_size=8, token_budget=10, paged=True, page_size=8)
+    assert ch == base
+
+
+def test_chunked_engine_validations(opts):
+    cfg, params = reduced_params("smollm-135m")
+    with pytest.raises(ValueError, match="fused"):
+        ServingEngine(cfg, opts, params, fused=False, chunked_prefill=True)
+    with pytest.raises(ValueError, match="page_size"):
+        ServingEngine(cfg, opts, params, chunked_prefill=True, paged=True,
+                      page_size=16, chunk_size=24, max_seq=64)
+    ring = ModelOptions(remat=False, window_cache=True)
+    with pytest.raises(ValueError, match="window_cache"):
+        ServingEngine(cfg, ring, params, chunked_prefill=True)
+    cfg_ssm, params_ssm = reduced_params("mamba2-780m")
+    with pytest.raises(ValueError, match="attention-only"):
+        ServingEngine(cfg_ssm, opts, params_ssm, chunked_prefill=True)
+
+
+def test_phase_report_percentiles_and_ttft(opts):
+    """EngineStats: per-request ttft/queue populated and phase_report
+    carries decode-tick percentiles on legacy engines too."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(0, cfg.vocab_size, 6, dtype=np.int32), 6)
+            for _ in range(3)]
+    _, eng = _streams(cfg, opts, params, reqs)
+    rep = eng.stats.phase_report()
+    assert {"decode_tick_p50", "decode_tick_p99"} <= rep.keys()
+    assert rep["decode_tick_p99"] >= rep["decode_tick_p50"] > 0
+    assert len(eng.stats.ttft_s) == 3
+    for r in eng.finished:
+        assert r.ttft_s >= r.queue_s >= 0
+
+
+def test_positioned_prefill_model_api(opts):
+    """model.prefill(cache_index>0): suffix prefill over existing caches is
+    bit-identical to one monolithic call."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+    lg_m, _ = M.prefill(cfg, opts, params,
+                        {"tokens": jnp.asarray(prompt[None])}, 32,
+                        cache_dtype=jnp.float32)
+    lg_a, caches = M.prefill(cfg, opts, params,
+                             {"tokens": jnp.asarray(prompt[None, :5])}, 32,
+                             cache_dtype=jnp.float32)
+    lg_b, _ = M.prefill(cfg, opts, params,
+                        {"tokens": jnp.asarray(prompt[None, 5:])}, 32,
+                        caches=caches, cache_index=5)
+    assert (jnp.asarray(lg_b) == jnp.asarray(lg_m)).all()
+    with pytest.raises(ValueError, match="existing caches"):
+        M.prefill(cfg, opts, params, {"tokens": jnp.asarray(prompt[None])},
+                  32, cache_index=5)

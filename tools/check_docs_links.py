@@ -1,8 +1,16 @@
 #!/usr/bin/env python
-"""Docs link check: every relative markdown link in README.md and docs/
-must resolve to an existing file (anchors are stripped; external URLs and
-badge/workflow links are skipped). Exits non-zero listing broken links —
-run by CI so the docs tree cannot rot silently.
+"""Docs consistency check, run by CI so the docs tree cannot rot silently.
+
+Two checks, both exiting non-zero with a listing on failure:
+
+1. **Links.** Every relative markdown link in README.md and docs/ must
+   resolve to an existing file (anchors are stripped; external URLs and
+   badge/workflow links are skipped).
+2. **Gate table.** The module keys in docs/benchmarks.md's gate table
+   (the `| `key`` | ... |` rows) must exactly match the ``MODULES``
+   registry in benchmarks/run.py — a module added without a docs row (or a
+   docs row for a renamed/removed module) fails. Parsed from source so the
+   check needs no jax import.
 
     python tools/check_docs_links.py [repo_root]
 """
@@ -14,6 +22,8 @@ import sys
 
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+TABLE_KEY = re.compile(r"^\|\s*`([a-z0-9_]+)`\s*\|", re.MULTILINE)
+MODULE_KEY = re.compile(r"^\s*\"([a-z0-9_]+)\":\s*\w+,\s*$", re.MULTILINE)
 
 
 def links_of(md: pathlib.Path):
@@ -23,6 +33,30 @@ def links_of(md: pathlib.Path):
         if target.startswith("../../"):
             continue  # repo-relative GitHub UI links (CI badge) — no file
         yield target.split("#", 1)[0]
+
+
+def check_gate_table(root: pathlib.Path):
+    """Module keys in the docs gate table vs benchmarks/run.py MODULES.
+    Returns (problems, table_row_count)."""
+    docs = root / "docs" / "benchmarks.md"
+    runner = root / "benchmarks" / "run.py"
+    problems = []
+    if not docs.exists() or not runner.exists():
+        missing = docs if not docs.exists() else runner
+        return [(missing, "<file missing>")], 0
+    table = set(TABLE_KEY.findall(docs.read_text()))
+    src = runner.read_text()
+    block = src[src.index("MODULES = {"):src.index("}", src.index("MODULES"))]
+    modules = set(MODULE_KEY.findall(block))
+    for key in sorted(modules - table):
+        problems.append((docs.relative_to(root),
+                         f"module `{key}` registered in benchmarks/run.py "
+                         f"but missing from the gate table"))
+    for key in sorted(table - modules):
+        problems.append((docs.relative_to(root),
+                         f"gate-table row `{key}` has no module in "
+                         f"benchmarks/run.py"))
+    return problems, len(table)
 
 
 def main() -> int:
@@ -38,11 +72,15 @@ def main() -> int:
             checked += 1
             if not (md.parent / target).resolve().exists():
                 broken.append((md.relative_to(root), target))
+    table_problems, n_rows = check_gate_table(root)
     for src, target in broken:
         print(f"BROKEN  {src}: {target}")
-    print(f"checked {checked} relative links in {len(files)} files, "
-          f"{len(broken)} broken")
-    return 1 if broken else 0
+    for src, msg in table_problems:
+        print(f"TABLE   {src}: {msg}")
+    print(f"checked {checked} relative links in {len(files)} files and "
+          f"{n_rows} gate-table rows; "
+          f"{len(broken)} broken, {len(table_problems)} table mismatches")
+    return 1 if broken or table_problems else 0
 
 
 if __name__ == "__main__":
