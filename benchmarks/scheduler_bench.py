@@ -1,17 +1,18 @@
-"""Chunked-prefill scheduler: bit-exactness, prefix-skip compute, and
-decode-tick latency under mixed arrivals.
+"""Chunked-prefill scheduler: bit-exactness, prefix-skip compute, banded
+key-lane work, and decode-tick latency under mixed arrivals.
 
-Three gates (violations raise; this is the CI smoke for the scheduler
+Four gates (violations raise; this is the CI smoke for the scheduler
 subsystem — see docs/scheduler.md for the tick anatomy and
 docs/benchmarks.md for how to read the output):
 
 1. **Bit-equality across chunkings.** Greedy token streams from the chunked
    engine must be bit-identical to the monolithic admit-stall baseline for
    chunk sizes {16, 64, full}, on both the dense and the paged layout. This
-   is the prefill-from-position contract: a chunk attending to the cache
-   under the offset causal mask reproduces monolithic prefill exactly
-   (masked lanes contribute exact zeros), so *how* a prompt is chunked can
-   never change what the model says.
+   is the prefill-from-position contract under the banded chunk core: every
+   serving prefill path scans the same absolute key-block partition with an
+   online softmax whose fully-masked block updates are exact no-ops, so
+   neither *how* a prompt is chunked nor *how much* cache view a dispatch
+   sees can ever change what the model says.
 2. **Prefix-hit compute skip.** Repeated prompts (the serving pattern for
    repeated robot observations) must *skip* the shared fraction of prefill:
    ``EngineStats.prefill_tokens + prefill_skipped == total prompt
@@ -26,9 +27,17 @@ docs/benchmarks.md for how to read the output):
    latency <= 0.8x the baseline's p99 (warm jit caches, interleaved
    best-of rounds, retried before failing so a loaded dev box doesn't
    flake what a quiet CI runner measures cleanly).
+4. **Banded key-lane work.** For a prompt of ``max_seq / 8``, prefill
+   attention key-axis work (``EngineStats.prefill_key_lanes``: rows x
+   banded live-prefix length actually attended) must come in <= 0.25x the
+   old full-view core's rows x ``max_seq`` figure
+   (``prefill_key_lanes_full``) — on both engines and both layouts. The
+   counter is structural (host-side accounting of what each dispatch
+   attends), so the gate is deterministic; the banded-vs-full-view core
+   wall clock is *reported* alongside, not gated (CPU timing noise).
 
 Reported rows: per-configuration tokens/s, prefill-token accounting, TTFT /
-queue means, and tick-latency percentiles for both engines.
+queue means, key-lane ratios, and tick-latency percentiles.
 """
 from __future__ import annotations
 
@@ -39,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.models import layers as L
 from repro.models import model as M
 from repro.models.layers import ModelOptions
 from repro.serving import Request, ServingEngine
@@ -46,8 +56,9 @@ from repro.serving import Request, ServingEngine
 DESCRIPTION = ("Chunked-prefill scheduler gates: greedy streams bit-identical "
                "to monolithic prefill for chunk sizes {16,64,full} (dense + "
                "paged), prefix hits skip >= the shared fraction of prefill "
-               "tokens, and p99 tick latency under mixed arrivals <= 0.8x "
-               "the admit-stall baseline")
+               "tokens, banded prefill key-lane work <= 0.25x the full-view "
+               "core for a max_seq/8 prompt, and p99 tick latency under "
+               "mixed arrivals <= 0.8x the admit-stall baseline")
 
 ARCH = "smollm-135m"
 PAGE_SIZE = 16
@@ -138,6 +149,67 @@ def run(emit):
     emit("scheduler/prefix_skip/tokens", float(st.prefill_skipped),
          f"total={rep_total};frac={frac:.3f};min={min_skip};"
          f"prefix_hits={st.prefix_hits};bit_equal=True")
+
+    # -- gate 4: banded key-lane work --------------------------------------
+    # Runs before the wall-clock gate 3 so a timing flake on a loaded
+    # box cannot mask this deterministic signal. A max_seq/8 prompt
+    # must attend <= 0.25x the key lanes of the old
+    # full-view core — structural, via the EngineStats key-lane counters
+    # (rows x banded live-prefix length vs rows x max_seq), on both engines
+    # and both layouts.
+    short = MAX_SEQ // 8
+    kl_reqs = [(rng.integers(0, cfg.vocab_size, short, dtype=np.int32), 6)]
+    for tag, kw in (("mono_dense", {}),
+                    ("mono_paged", dict(paged=True, page_size=PAGE_SIZE)),
+                    ("chunk_dense", dict(chunked_prefill=True, chunk_size=16,
+                                         token_budget=TOKEN_BUDGET)),
+                    ("chunk_paged", dict(chunked_prefill=True, chunk_size=16,
+                                         token_budget=TOKEN_BUDGET,
+                                         paged=True, page_size=PAGE_SIZE))):
+        _, eng, _ = _run(cfg, opts, params, kl_reqs, **kw)
+        st = eng.stats
+        ratio = st.prefill_key_lanes / st.prefill_key_lanes_full
+        assert ratio <= 0.25, \
+            f"{tag}: banded prefill key-lane ratio {ratio:.3f} > 0.25 for " \
+            f"a {short}-token prompt (banded core not engaged?)"
+        # the per-tick breakdown must account for every attended lane
+        assert sum(st.tick_key_lanes) == st.prefill_key_lanes, \
+            f"{tag}: tick_key_lanes {sum(st.tick_key_lanes)} != total " \
+            f"{st.prefill_key_lanes}"
+        busy = [t for t in st.tick_key_lanes if t]
+        emit(f"scheduler/band/{tag}", ratio,
+             f"lanes={st.prefill_key_lanes};"
+             f"full={st.prefill_key_lanes_full};gate<=0.25;"
+             f"band={opts.prefill_band};"
+             f"ticks_with_prefill={len(busy)};"
+             f"max_tick_lanes={max(busy) if busy else 0}")
+    # reported (not gated): one chunk dispatch through the banded core vs
+    # the old full-max_seq-view dense core — CPU wall clock is noisy, the
+    # structural counter above is the gate
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    S, N, K, h = 16, 8, 2, 64
+    q = jax.random.normal(ks[0], (1, S, N, h))
+    kc = jax.random.normal(ks[1], (1, MAX_SEQ, K, h))
+    vc = jax.random.normal(ks[2], (1, MAX_SEQ, K, h))
+    idx = jnp.asarray([short - S], jnp.int32)
+    band = opts.prefill_band
+    Lb = L.band_len(short, band, MAX_SEQ)
+    cores = {
+        "banded": jax.jit(lambda q, k, v: L.attention_chunk_banded(
+            q, k[:, :Lb], v[:, :Lb], idx, 0, band)),
+        "full_view": jax.jit(lambda q, k, v: L.attention_dense(
+            q, k, v, idx[0] + jnp.arange(S), jnp.arange(MAX_SEQ), 0)),
+    }
+    for name, f in cores.items():
+        f(q, kc, vc).block_until_ready()          # warm the jit cache
+        t0 = time.perf_counter()
+        for _ in range(20):
+            out = f(q, kc, vc)
+        out.block_until_ready()
+        dt = (time.perf_counter() - t0) / 20
+        emit(f"scheduler/band/core_{name}", dt * 1e6,
+             f"S={S};key_lanes={Lb if name == 'banded' else MAX_SEQ};"
+             f"reported_not_gated=True")
 
     # -- gate 3: p99 tick latency under mixed arrivals ---------------------
     # short decode-heavy requests + one long prompt landing behind them: the

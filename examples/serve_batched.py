@@ -43,10 +43,14 @@ def main(argv=None):
                         "when --paged)")
     p.add_argument("--token-budget", type=int, default=24,
                    help="tokens one tick may spend (decode + chunks)")
+    p.add_argument("--prefill-band", type=int, default=32,
+                   help="key-block size of the banded prefill attention "
+                        "core (prefill key work ~ live prefix, not max_seq)")
     args = p.parse_args(argv)
 
     cfg = get_config("qwen1.5-0.5b").reduced()
-    opts = ModelOptions(remat=False, use_pallas=args.pallas)
+    opts = ModelOptions(remat=False, use_pallas=args.pallas,
+                        prefill_band=args.prefill_band)
     params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
     eng = ServingEngine(cfg, opts, params, n_slots=4, max_seq=96, eos=-1,
@@ -83,6 +87,9 @@ def main(argv=None):
     ph = st.phase_report()
     print(f"engine phases: vision {ph['vision']:.3f}s | "
           f"prefill {ph['prefill']:.3f}s | decode {ph['decode']:.3f}s")
+    if "prefill_key_lane_ratio" in ph:
+        print(f"banded prefill (band {args.prefill_band}): key-lane ratio "
+              f"{ph['prefill_key_lane_ratio']:.3f} vs the full max_seq view")
     if args.paged:
         print(f"paged KV pool ({args.kv_dtype}): pages_hwm {st.pages_hwm} | "
               f"cache_bytes_hwm {st.cache_bytes_hwm} | "

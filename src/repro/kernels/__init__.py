@@ -4,9 +4,13 @@ interpret mode against a pure-jnp oracle (ref.py):
 - flash_attention: prefill/training attention (causal + sliding window, GQA)
 - decode_attention: flash-decode over the KV cache (the paper's bottleneck),
   dense per-slot layout + paged variant (page-table gather, serving engine)
+- chunk_prefill: banded chunk-prefill attention over a live cache view
+  (serving prefill-with-cache; dense view + paged page-table-gather variant)
 - ssd: Mamba2 chunked state-space-duality scan
 - moe_gmm: grouped expert MLP (capacity-based MoE hot loop)
 """
-from repro.kernels import decode_attention, flash_attention, moe_gmm, ssd
+from repro.kernels import (chunk_prefill, decode_attention, flash_attention,
+                           moe_gmm, ssd)
 
-__all__ = ["decode_attention", "flash_attention", "moe_gmm", "ssd"]
+__all__ = ["chunk_prefill", "decode_attention", "flash_attention", "moe_gmm",
+           "ssd"]

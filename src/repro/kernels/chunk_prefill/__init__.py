@@ -1,0 +1,4 @@
+from repro.kernels.chunk_prefill.ops import (chunk_prefill_attention,
+                                             paged_chunk_prefill_attention)
+
+__all__ = ["chunk_prefill_attention", "paged_chunk_prefill_attention"]

@@ -47,6 +47,21 @@ def gather_scales(scales, page_table, page_size: int):
     return jnp.repeat(g, page_size, axis=1)[..., None]
 
 
+def gather_dequant(k_pages, v_pages, page_table, k_scales=None,
+                   v_scales=None):
+    """Materialize the dense per-slot K/V views of a paged pool,
+    dequantizing (``code * scale`` in fp32) when per-page scales are given.
+    The single definition of the gather(+dequant) prelude shared by the
+    paged fallbacks (decode and banded chunk) and the paged oracles."""
+    ps = k_pages.shape[1]
+    kd = gather_pages(k_pages, page_table)
+    vd = gather_pages(v_pages, page_table)
+    if k_scales is not None:
+        kd = kd.astype(jnp.float32) * gather_scales(k_scales, page_table, ps)
+        vd = vd.astype(jnp.float32) * gather_scales(v_scales, page_table, ps)
+    return kd, vd
+
+
 def paged_decode_attention_ref(q, k_pages, v_pages, page_table, index,
                                window: int = GLOBAL_WINDOW):
     """Oracle for the paged kernel: gather pages into the dense layout, then

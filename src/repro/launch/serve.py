@@ -64,12 +64,18 @@ def main(argv=None):
     p.add_argument("--token-budget", type=int, default=64,
                    help="tokens one tick may spend across decode steps and "
                         "prefill chunks")
+    p.add_argument("--prefill-band", type=int, default=32,
+                   help="key-block size of the banded prefill-with-cache "
+                        "attention core: prefill key-axis work covers the "
+                        "live prefix rounded up to this block instead of "
+                        "max_seq (see docs/scheduler.md)")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    opts = ModelOptions(remat=False, use_pallas=args.pallas)
+    opts = ModelOptions(remat=False, use_pallas=args.pallas,
+                        prefill_band=args.prefill_band)
     params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
     eng = ServingEngine(cfg, opts, params, n_slots=args.slots,
@@ -99,8 +105,12 @@ def main(argv=None):
     print(f"[serve] {st.decode_syncs} decode host syncs / "
           f"{st.device_steps} device steps "
           f"({'fused' if not args.reference else 'reference'} path)")
+    ph = st.phase_report()
+    if st.prefill_key_lanes_full:
+        print(f"[serve] banded prefill: band={args.prefill_band} "
+              f"key_lane_ratio={ph['prefill_key_lane_ratio']:.3f} "
+              f"(banded live-prefix lanes / max_seq-view equivalent)")
     if args.chunked_prefill:
-        ph = st.phase_report()
         print(f"[serve] scheduler: chunk={args.chunk_size} "
               f"budget={args.token_budget} "
               f"prefill_tokens={st.prefill_tokens} "

@@ -39,6 +39,15 @@ class ModelOptions:
     #                                    peak temp = max (not sum) over the
     #                                    block's sublayers (§Perf, Cell C)
     causal_pairs: bool = False         # triangular chunk-pair flash (perf opt)
+    prefill_band: int = 32             # key-block size for banded prefill-
+    #                                    with-cache attention: key-axis work
+    #                                    per chunk covers the live prefix
+    #                                    [0, cache_index + S) rounded up to
+    #                                    this block, not max_seq. One stack-
+    #                                    wide constant — the blockwise online
+    #                                    softmax makes results independent of
+    #                                    chunking/view length, but only for a
+    #                                    fixed absolute block partition
     window_cache: bool = False         # per-layer-window KV cache (perf opt)
     unroll_layers: bool = False        # unroll the layer scan (cost-analysis
     #                                    validation: XLA counts scan bodies once)
@@ -269,6 +278,75 @@ def attention_banded(q, k, v, q_pos, k_pos, window: int, chunk: int):
     return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, N, h)
 
 
+def band_len(live: int, band: int, limit: int) -> int:
+    """Static key-axis length for a banded prefill-with-cache dispatch: the
+    live prefix ``live`` rounded up to a whole key block, clamped to the
+    cache capacity ``limit``. The band bound is a pure FLOP/bytes
+    optimization — trailing blocks are exact no-ops in the blockwise online
+    softmax — so any bound >= the true live length is correct."""
+    return min(-(-live // band) * band, limit)
+
+
+def attention_chunk_banded(q, k_cache, v_cache, index, window: int,
+                           band: int):
+    """Banded chunk-prefill core (pure jnp; the Pallas twin is
+    ``kernels/chunk_prefill``): one prefill chunk of S queries at positions
+    ``index .. index+S-1`` attends against a live cache view, scanned over
+    fixed ``band``-sized key blocks with an online softmax.
+
+    q [B,S,N,h]; cache view [B,L,K,h] (the caller slices L down to the
+    banded live bound — see ``band_len``); index scalar or per-slot [B].
+
+    The bit-stability contract the scheduler's equality gates build on: a
+    key block that is fully masked for a query row updates that row's
+    softmax state by *exactly* nothing (``corr == exp(0) == 1``, ``p == 0``
+    — fp32-exact), so a query's result depends only on the absolute block
+    partition of the keys at or before its own position. Chunking the
+    prompt differently, or passing a longer (even stale/garbage-padded)
+    cache view, changes only which blocks are no-ops — never the bits.
+    """
+    B, S, N, h = q.shape
+    L, K = k_cache.shape[1], k_cache.shape[2]
+    G = N // K
+    Lp = -(-L // band) * band
+    if Lp != L:                      # pad the view to whole blocks; padded
+        pad = ((0, 0), (0, Lp - L), (0, 0), (0, 0))   # lanes sit past every
+        k_cache = jnp.pad(k_cache, pad)               # query position and
+        v_cache = jnp.pad(v_cache, pad)               # are masked exactly
+    nk = Lp // band
+    scale = float(1.0 / np.sqrt(h))
+    qg = (q * scale).reshape(B, S, K, G, h)
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+    q_pos = idx[:, None] + jnp.arange(S, dtype=jnp.int32)     # [B, S]
+
+    def block(st, jk):
+        m, l, acc = st
+        kj = jax.lax.dynamic_slice_in_dim(k_cache, jk * band, band, 1)
+        vj = jax.lax.dynamic_slice_in_dim(v_cache, jk * band, band, 1)
+        kpos = jk * band + jnp.arange(band)
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, kj).astype(jnp.float32)
+        mask = kpos[None, None] <= q_pos[..., None]           # [B, S, band]
+        if window != GLOBAL_WINDOW:
+            mask &= (q_pos[..., None] - kpos[None, None]) < window
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None]) * mask[:, None, None]
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bkgst,btkh->bkgsh", p,
+                        vj.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    st0 = (jnp.full((B, K, G, S), NEG_INF, jnp.float32),
+           jnp.zeros((B, K, G, S), jnp.float32),
+           jnp.zeros((B, K, G, S, h), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(block, st0, jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, (1, 2), (2, 3)).reshape(B, S, N, h) \
+        .astype(q.dtype)
+
+
 def attention_decode(q, k_cache, v_cache, index, window: int,
                      opts: Optional[ModelOptions] = None):
     """Single-token decode against a cache. q [B,1,N,h]; cache [B,Smax,K,h];
@@ -478,55 +556,162 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, index,
                                             v_scales=v_scales, window=window,
                                             interpret=opts.pallas_interpret)
         return out[:, None]
-    from repro.kernels.decode_attention.ref import gather_pages, gather_scales
-    kd = gather_pages(k_pages, page_table)
-    vd = gather_pages(v_pages, page_table)
-    if k_scales is not None:
-        kd = kd.astype(jnp.float32) * gather_scales(k_scales, page_table,
-                                                    k_pages.shape[1])
-        vd = vd.astype(jnp.float32) * gather_scales(v_scales, page_table,
-                                                    v_pages.shape[1])
+    from repro.kernels.decode_attention.ref import gather_dequant
+    kd, vd = gather_dequant(k_pages, v_pages, page_table, k_scales, v_scales)
     return attention_decode(q, kd, vd, index, window)
 
 
-def _attend_cache_paged(q, k_pages, v_pages, page_table, positions,
-                        window: int, k_scales=None, v_scales=None):
-    """Prefill-chunk attention against a paged pool: gather the slot's pages
-    into the dense per-position view (dequantizing when scales are given)
-    and run the masked dense core. The gathered length is
-    ``npg * page_size`` — the same key axis the dense layout's chunk
-    attention uses — and unwritten/stale rows are excluded by the exact
-    positional mask, so paged and dense chunked prefill stay bit-identical
-    for unquantized pools."""
-    from repro.kernels.decode_attention.ref import gather_pages, gather_scales
-    ps = k_pages.shape[1]
-    kd = gather_pages(k_pages, page_table)
-    vd = gather_pages(v_pages, page_table)
-    if k_scales is not None:
-        kd = kd.astype(jnp.float32) * gather_scales(k_scales, page_table, ps)
-        vd = vd.astype(jnp.float32) * gather_scales(v_scales, page_table, ps)
-    q_pos = positions[0] if positions.ndim == 2 else positions
-    return attention_dense(q, kd, vd, q_pos, jnp.arange(kd.shape[1]), window,
-                           causal=True)
+# ---------------------------------------------------------------------------
+# unified attention dispatch
+# ---------------------------------------------------------------------------
+
+def attention_route(mode: str, layout: str, *, S: int, Skv: int, window: int,
+                    opts: ModelOptions, causal: bool = True) -> str:
+    """The single routing decision for every attention dispatch:
+    (mode × layout × shape) -> core name. ``attention()`` resolves its
+    arguments to a (mode, layout) pair, asks this function for the core,
+    and executes it via ``run_attention_core`` — there is no other
+    attention if-ladder in the model stack. The full table is rendered in
+    docs/architecture.md.
+
+    Modes:
+      - ``decode``  S == 1 against a cache (the paper's bottleneck phase)
+      - ``chunk``   S > 1 prefill against a live cache view (chunked or
+                    monolithic serving prefill; positioned or from zero)
+      - ``fresh``   self-attention over exactly the new rows (training
+                    forward, ring-buffer prefill, whole-buffer dryrun/cost
+                    shapes — no earlier cache contents to see)
+      - ``cross``   encoder context (never cached, never causal)
+
+    Layouts: ``dense`` per-slot [B, Smax, K, h] buffers; ``paged`` shared
+    page pools behind a per-slot table; ``ring`` per-layer-window ring
+    buffers; ``none`` (no cache view).
+
+    Shape gates: the fresh Pallas flash kernel keeps its
+    ``S % 128 == 0 and Sq == Skv`` tiling gate, but chunk mode has no such
+    restriction — the banded chunk kernel takes any (padded) chunk length
+    against any cache view, which is how the old Pallas gate generalizes
+    to padded bands."""
+    if mode == "decode":
+        if layout == "ring":
+            return "decode_ring"
+        if layout == "paged":
+            return ("decode_paged_flash" if opts.use_pallas
+                    else "decode_paged_gather")
+        return "decode_flash" if opts.use_pallas else "decode_dense"
+    if mode == "chunk":
+        if layout == "paged":
+            return ("chunk_paged_flash" if opts.use_pallas
+                    else "chunk_banded_gather")
+        return "chunk_flash" if opts.use_pallas else "chunk_banded"
+    # fresh / cross: attention over exactly the new rows
+    if opts.use_pallas and causal and S % 128 == 0 and Skv == S:
+        return "fresh_flash"
+    if Skv <= opts.dense_attn_threshold or Skv % opts.attn_chunk \
+            or not causal:
+        return "fresh_dense"
+    if window != GLOBAL_WINDOW and window <= Skv // 2:
+        return "fresh_banded"
+    return "fresh_flash_ref"
+
+
+def run_attention_core(route: str, q, k, v, *, opts: ModelOptions,
+                       window: int, causal: bool = True, q_pos=None,
+                       k_pos=None, index=None, page_table=None,
+                       k_scales=None, v_scales=None, live_len=None):
+    """Execute one routed attention core. ``k``/``v`` are the new rows
+    (fresh/cross), the cache view [B, Smax, K, h] (dense decode/chunk), or
+    the page pools [num_pages, page_size, K, h] (paged routes, with
+    ``page_table`` and optional quantization ``*_scales``). ``index`` is
+    the decode position / chunk start (scalar or per-slot [B]);
+    ``live_len`` (static int or None) bounds the banded chunk cores' key
+    axis to the live prefix — see ``band_len``."""
+    # -- decode: one token against the cache --------------------------------
+    if route == "decode_ring":
+        return attention_decode_ring(q, k, v, index)
+    if route == "decode_flash":
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention(q[:, 0], k, v, index, window=window,
+                                      interpret=opts.pallas_interpret)
+        return out[:, None]
+    if route == "decode_dense":
+        return attention_decode(q, k, v, index, window)
+    if route == "decode_paged_flash":
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.paged_decode_attention(q[:, 0], k, v, page_table, index,
+                                            k_scales=k_scales,
+                                            v_scales=v_scales, window=window,
+                                            interpret=opts.pallas_interpret)
+        return out[:, None]
+    if route == "decode_paged_gather":
+        return attention_decode_paged(q, k, v, page_table, index, window,
+                                      k_scales=k_scales, v_scales=v_scales)
+    # -- chunk: S > 1 prefill against a live cache view ---------------------
+    band = opts.prefill_band
+    if route in ("chunk_flash", "chunk_banded"):
+        smax = k.shape[1]
+        Lb = band_len(smax if live_len is None else live_len, band, smax)
+        kb, vb = k[:, :Lb], v[:, :Lb]
+        if route == "chunk_flash":
+            from repro.kernels.chunk_prefill import ops as cp_ops
+            return cp_ops.chunk_prefill_attention(
+                q, kb, vb, index, window=window, bk=band,
+                interpret=opts.pallas_interpret)
+        return attention_chunk_banded(q, kb, vb, index, window, band)
+    if route in ("chunk_paged_flash", "chunk_banded_gather"):
+        ps, npg = k.shape[1], page_table.shape[1]
+        Lb = band_len(npg * ps if live_len is None else live_len, band,
+                      npg * ps)
+        pt = page_table[:, :(Lb + ps - 1) // ps]
+        if route == "chunk_paged_flash":
+            from repro.kernels.chunk_prefill import ops as cp_ops
+            return cp_ops.paged_chunk_prefill_attention(
+                q, k, v, pt, index, k_scales=k_scales, v_scales=v_scales,
+                window=window, interpret=opts.pallas_interpret)
+        from repro.kernels.decode_attention.ref import gather_dequant
+        kd, vd = gather_dequant(k, v, pt, k_scales, v_scales)
+        return attention_chunk_banded(q, kd, vd, index, window, band)
+    # -- fresh / cross: exactly the new rows --------------------------------
+    if route in ("fresh_flash", "fresh_dense", "fresh_banded",
+                 "fresh_flash_ref"):
+        q_pos = q_pos[0] if q_pos.ndim == 2 else q_pos
+        k_pos = k_pos[0] if k_pos.ndim == 2 else k_pos
+        if route == "fresh_flash":
+            from repro.kernels.flash_attention import ops as fa_ops
+            return fa_ops.flash_attention(q, k, v, window=window,
+                                          interpret=opts.pallas_interpret)
+        if route == "fresh_dense":
+            return attention_dense(q, k, v, q_pos, k_pos, window, causal)
+        if route == "fresh_banded":
+            return attention_banded(q, k, v, q_pos, k_pos, window,
+                                    opts.attn_chunk)
+        return attention_flash_ref(q, k, v, q_pos, k_pos, window,
+                                   opts.attn_chunk,
+                                   causal_pairs=opts.causal_pairs)
+    raise ValueError(f"unknown attention route {route!r}")
 
 
 def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
               positions, cache=None, cache_index=None, ctx=None,
               ctx_prefix: str = "", causal: bool = True, page_table=None,
-              n_valid=None):
-    """Full attention sub-layer (projections + core + output proj).
+              n_valid=None, live_len=None):
+    """Full attention sub-layer: projections + cache write path + the
+    routed core (``attention_route`` / ``run_attention_core``) + output
+    projection.
 
     Decode mode when ``cache`` is a (k,v) tuple and x has S==1.
     Cross-attention when ``ctx`` (encoder output) is given: K/V from ctx.
     With ``page_table`` [B,npg] the cache tuple is interpreted as paged
     pools [num_pages, page_size, K, h]; S>1 runs a prefill chunk that is
-    scattered page-wise and attends through the gathered pool.
+    scattered page-wise and attends through the pool.
     Prefill with a cache supports ``cache_index > 0`` (chunked prefill /
     prefill-from-position): the chunk is written at its positions and its
-    queries attend against the *whole* cache under the positional causal
-    mask, so earlier chunks — or prefix-cache pages the engine never
-    recomputed — are visible. ``n_valid`` masks the padding tail of a
-    partial final chunk out of the write path.
+    queries attend against the live cache prefix through the banded chunk
+    core, so earlier chunks — or prefix-cache pages the engine never
+    recomputed — are visible, while key-axis work scales with
+    ``live_len`` (a static bound on ``cache_index + S``; None means the
+    whole view) instead of ``max_seq``. ``n_valid`` masks the padding tail
+    of a partial final chunk out of the write path.
     Returns (out, new_cache).
     """
     pre = ctx_prefix
@@ -545,8 +730,7 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
             v = v + p[pre + "bv"].astype(v.dtype)
     if cfg.pos == "rope" and not pre:
         q = rope(q, positions, cfg.rope_theta)
-        if ctx is None or not pre:
-            k = rope(k, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
     q = constrain(q, "batch", "act_seq", "act_heads", None)
 
     new_cache = cache
@@ -569,14 +753,13 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
             new_cache = (k_cache, v_cache)
             if k_sc is not None:
                 new_cache += (k_sc, v_sc)
-            if S == 1:
-                out = attention_decode_paged(q, k_cache, v_cache, page_table,
-                                             cache_index, window, opts,
-                                             k_scales=k_sc, v_scales=v_sc)
-            else:
-                out = _attend_cache_paged(q, k_cache, v_cache, page_table,
-                                          positions, window,
-                                          k_scales=k_sc, v_scales=v_sc)
+            route = attention_route("decode" if S == 1 else "chunk", "paged",
+                                    S=S, Skv=k_cache.shape[1], window=window,
+                                    opts=opts, causal=causal)
+            out = run_attention_core(route, q, k_cache, v_cache, opts=opts,
+                                     window=window, index=cache_index,
+                                     page_table=page_table, k_scales=k_sc,
+                                     v_scales=v_sc, live_len=live_len)
         else:
             smax = cache[0].shape[1]
             ring = (window != GLOBAL_WINDOW and smax == window)
@@ -591,52 +774,44 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
                 v_cache = update_cache_chunk(cache[1], v, cache_index,
                                              n_valid)
             new_cache = (k_cache, v_cache)
+            whole = (not ring and isinstance(cache_index, int)
+                     and cache_index == 0 and S == smax)
             if S == 1:
-                if ring:
-                    out = attention_decode_ring(q, k_cache, v_cache,
-                                                cache_index)
-                else:
-                    out = attention_decode(q, k_cache, v_cache, cache_index,
-                                           window, opts)
-            elif ring or (isinstance(cache_index, int) and cache_index == 0
-                          and S == smax):
+                mode, layout = "decode", ("ring" if ring else "dense")
+            elif ring or whole:
                 # ring caches don't support positioned prefill, and a chunk
                 # filling the whole buffer has no earlier cache contents —
-                # both attend within the fresh chunk (flash/banded cores)
-                out = _core(q, k, v, positions, positions, window, opts,
-                            causal)
+                # both attend within the fresh chunk (flash/banded cores,
+                # which also tile big dryrun/cost shapes the untiled chunk
+                # cores would not)
+                mode, layout = "fresh", ("ring" if ring else "dense")
             else:
-                # prefill chunk at cache_index: attend against the cache,
-                # which holds this chunk (just written) and every earlier
-                # one; rows past the write point are zero/stale and the
-                # positional causal mask excludes them exactly, so the
-                # result is bit-identical across chunkings of the prompt
-                q_pos = positions[0] if positions.ndim == 2 else positions
-                out = attention_dense(q, k_cache, v_cache, q_pos,
-                                      jnp.arange(smax), window, causal)
+                mode, layout = "chunk", "dense"
+            route = attention_route(mode, layout, S=S, Skv=S, window=window,
+                                    opts=opts, causal=causal)
+            if mode == "fresh":
+                out = run_attention_core(route, q, k, v, opts=opts,
+                                         window=window, causal=causal,
+                                         q_pos=positions, k_pos=positions)
+            else:
+                out = run_attention_core(route, q, k_cache, v_cache,
+                                         opts=opts, window=window,
+                                         index=cache_index,
+                                         live_len=live_len)
     elif pre and ctx is not None:
-        kpos = jnp.arange(k.shape[1])
-        out = _core(q, k, v, positions, kpos, GLOBAL_WINDOW, opts, causal=False)
+        route = attention_route("cross", "none", S=S, Skv=k.shape[1],
+                                window=GLOBAL_WINDOW, opts=opts, causal=False)
+        out = run_attention_core(route, q, k, v, opts=opts,
+                                 window=GLOBAL_WINDOW, causal=False,
+                                 q_pos=positions, k_pos=jnp.arange(k.shape[1]))
     else:
-        out = _core(q, k, v, positions, positions, window, opts, causal)
+        route = attention_route("fresh", "none", S=S, Skv=k.shape[1],
+                                window=window, opts=opts, causal=causal)
+        out = run_attention_core(route, q, k, v, opts=opts, window=window,
+                                 causal=causal, q_pos=positions,
+                                 k_pos=positions)
     out = jnp.einsum("bsnh,nhd->bsd", out, p[pre + "wo"])
     return out, new_cache
-
-
-def _core(q, k, v, q_pos, k_pos, window, opts: ModelOptions, causal=True):
-    S = k.shape[1]
-    q_pos = q_pos[0] if q_pos.ndim == 2 else q_pos
-    k_pos = k_pos[0] if k_pos.ndim == 2 else k_pos
-    if opts.use_pallas and causal and S % 128 == 0 and q.shape[1] == S:
-        from repro.kernels.flash_attention import ops as fa_ops
-        return fa_ops.flash_attention(q, k, v, window=window,
-                                      interpret=opts.pallas_interpret)
-    if S <= opts.dense_attn_threshold or S % opts.attn_chunk or not causal:
-        return attention_dense(q, k, v, q_pos, k_pos, window, causal)
-    if window != GLOBAL_WINDOW and window <= S // 2:
-        return attention_banded(q, k, v, q_pos, k_pos, window, opts.attn_chunk)
-    return attention_flash_ref(q, k, v, q_pos, k_pos, window, opts.attn_chunk,
-                               causal_pairs=opts.causal_pairs)
 
 
 # ---------------------------------------------------------------------------

@@ -124,7 +124,7 @@ def forward(cfg: ModelConfig, opts: ModelOptions, params, batch,
 
 def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
             max_seq: int, cache_dtype=jnp.bfloat16, caches=None,
-            cache_index=0, page_table=None):
+            cache_index=0, page_table=None, live_len=None):
     """Process the prompt, filling a decode cache sized ``max_seq``.
     Returns (last-position logits [B,1,V], caches).
 
@@ -136,12 +136,22 @@ def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
     lives at positions 0..n_vis-1, which a suffix by definition starts
     after) and needs ``caches`` from an earlier prefill or ``init_caches``.
     ``page_table`` [B, npg] routes the writes/reads through a paged pool
-    (see serving.kv_pool)."""
+    (see serving.kv_pool).
+
+    ``live_len`` (static int) bounds the banded chunk attention core's key
+    axis to the live cache prefix ``[0, live_len)``; prefill-from-zero
+    derives it from the prompt shape, positioned prefill derives it from a
+    static ``cache_index``, and callers with a dynamic ``cache_index``
+    (the serving engine) pass the bound explicitly. ``None`` with a
+    dynamic index falls back to the full ``max_seq`` view — correct, just
+    unbanded."""
     positioned = caches is not None or page_table is not None \
         or not (isinstance(cache_index, int) and cache_index == 0)
     if not positioned:
         x, positions, ctx = _sequence(params, batch, cfg, opts)
         caches = init_caches(cfg, x.shape[0], max_seq, cache_dtype, opts)
+        if live_len is None:
+            live_len = x.shape[1]
     else:
         if caches is None:
             raise ValueError("prefill from cache_index > 0 (or through a "
@@ -157,10 +167,13 @@ def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
             jnp.arange(S, dtype=jnp.int32), (B, S))
         x = _embed_tokens(params, tokens, cfg, positions=positions)
         ctx = None
+        if live_len is None and isinstance(cache_index, int):
+            live_len = cache_index + S
     x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
                                      positions, caches=caches,
                                      cache_index=cache_index, ctx=ctx,
-                                     page_table=page_table)
+                                     page_table=page_table,
+                                     live_len=live_len)
     return _logits(params, x[:, -1:], cfg), caches
 
 
@@ -178,19 +191,24 @@ def embed_prompt(cfg: ModelConfig, opts: ModelOptions, params, batch):
 
 
 def prefill_chunk(cfg: ModelConfig, opts: ModelOptions, params, embeds,
-                  caches, cache_index, n_valid=None, page_table=None):
+                  caches, cache_index, n_valid=None, page_table=None,
+                  live_len=None):
     """Positioned prefill over one chunk of precomputed embeddings
     (``embed_prompt`` output sliced to [B, C, d], zero-padded to C).
     Returns (last-valid-position logits [B, 1, V], caches).
 
     The chunk's queries attend to every cache position ``<=`` their own —
     earlier chunks, and prefix-cache pages the engine never recomputed —
-    under the offset causal mask. ``n_valid`` (scalar) marks how many rows
-    are real prompt: padding rows are masked out of the cache write path
-    (dense writes dropped, paged writes routed to the null page). Only the
-    row at ``n_valid - 1`` runs the lm-head projection — a full [C, vocab]
-    projection per chunk would rival the chunk's transformer cost, and the
-    caller samples from at most one position (the final chunk's last)."""
+    through the banded chunk core, whose key-axis work covers the live
+    prefix ``[0, live_len)`` (``live_len``: static bound on
+    ``cache_index + C``, rounded up by the caller to bound retraces; None
+    falls back to the full cache view) instead of ``max_seq``. ``n_valid``
+    (scalar) marks how many rows are real prompt: padding rows are masked
+    out of the cache write path (dense writes dropped, paged writes routed
+    to the null page). Only the row at ``n_valid - 1`` runs the lm-head
+    projection — a full [C, vocab] projection per chunk would rival the
+    chunk's transformer cost, and the caller samples from at most one
+    position (the final chunk's last)."""
     B, C, _ = embeds.shape
     positions = jnp.broadcast_to(
         jnp.asarray(cache_index, jnp.int32) +
@@ -199,7 +217,8 @@ def prefill_chunk(cfg: ModelConfig, opts: ModelOptions, params, embeds,
     x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
                                      positions, caches=caches,
                                      cache_index=cache_index,
-                                     page_table=page_table, n_valid=n_valid)
+                                     page_table=page_table, n_valid=n_valid,
+                                     live_len=live_len)
     last = C - 1 if n_valid is None else jnp.asarray(n_valid, jnp.int32) - 1
     x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
     return _logits(params, x_last, cfg), caches

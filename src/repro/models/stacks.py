@@ -195,7 +195,7 @@ def tower_template(enc: VisionConfig, d_out: int) -> Dict:
 
 def apply_sublayer(p, x, cfg: ModelConfig, opts: L.ModelOptions, kind: SubKind,
                    positions, cache=None, cache_index=None, ctx=None,
-                   page_table=None, n_valid=None):
+                   page_table=None, n_valid=None, live_len=None):
     """One transformer sub-layer. Returns (x, new_cache_dict)."""
     new_cache: Dict = {}
     h = L.apply_norm(p, x, cfg, "ln1")
@@ -209,7 +209,8 @@ def apply_sublayer(p, x, cfg: ModelConfig, opts: L.ModelOptions, kind: SubKind,
                 attn_cache += (cache["k_scale"], cache["v_scale"])
         a, attn_cache = L.attention(p, h, cfg, opts, kind.window, positions,
                                     cache=attn_cache, cache_index=cache_index,
-                                    page_table=page_table, n_valid=n_valid)
+                                    page_table=page_table, n_valid=n_valid,
+                                    live_len=live_len)
         if attn_cache is not None:
             new_cache["k"], new_cache["v"] = attn_cache[:2]
             if len(attn_cache) == 4:
@@ -259,14 +260,16 @@ def apply_sublayer(p, x, cfg: ModelConfig, opts: L.ModelOptions, kind: SubKind,
 
 def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
                   positions, caches=None, cache_index=None, ctx=None,
-                  train: bool = False, page_table=None, n_valid=None):
+                  train: bool = False, page_table=None, n_valid=None,
+                  live_len=None):
     """Run the full decoder stack. Returns (x, new_caches).
 
     ``page_table`` [B, npg] switches attention cache leaves to the paged
     layout (shared per-layer pools + per-slot tables); it is a single table
     shared by every layer, captured as a constant by the layer scan.
     ``n_valid`` masks a prefill chunk's padding rows out of the cache write
-    path (see layers.attention)."""
+    path; ``live_len`` (static) bounds the banded chunk core's key axis to
+    the live cache prefix (see layers.attention)."""
     period, nblocks, ntail = stack_plan(cfg)
     kinds = sub_kinds(cfg)
 
@@ -277,7 +280,8 @@ def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
             sub_fn = functools.partial(
                 apply_sublayer, cfg=cfg, opts=opts, kind=kinds[j],
                 positions=positions, cache=sub_c, cache_index=cache_index,
-                ctx=ctx, page_table=page_table, n_valid=n_valid)
+                ctx=ctx, page_table=page_table, n_valid=n_valid,
+                live_len=live_len)
             if train and opts.remat and opts.remat_sublayers and period > 1:
                 sub_fn = jax.checkpoint(
                     sub_fn, policy=jax.checkpoint_policies.nothing_saveable)
@@ -317,7 +321,8 @@ def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
             x, nc = apply_sublayer(params["tail"][f"tail{j}"], x, cfg, opts,
                                    kinds[j], positions, cache=tc,
                                    cache_index=cache_index, ctx=ctx,
-                                   page_table=page_table, n_valid=n_valid)
+                                   page_table=page_table, n_valid=n_valid,
+                                   live_len=live_len)
             if nc:
                 tail_new[f"tail{j}"] = nc
         if new_caches is not None:

@@ -73,7 +73,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import kv_quant
 from repro.models import model as M
-from repro.models.layers import ModelOptions
+from repro.models.layers import ModelOptions, band_len
 from repro.models.stacks import cache_batch_axis, is_paged_leaf, is_scale_leaf
 from repro.serving import sampler as S
 from repro.serving.kv_pool import KVPool, PoolExhausted
@@ -124,6 +124,14 @@ class EngineStats:
     decode_time: float = 0.0
     prefill_tokens: int = 0     # prompt positions actually run through prefill
     prefill_skipped: int = 0    # prompt positions skipped via prefix-cache hit
+    # key-lane accounting for the banded prefill-with-cache core: per prefill
+    # dispatch, every query row attends a key axis of the banded live-prefix
+    # length instead of the full max_seq view the pre-dispatcher core used.
+    # prefill_key_lanes sums rows x attended lanes; *_full sums the same
+    # rows x max_seq — their ratio is the structurally recovered key-axis
+    # factor (phase_report()["prefill_key_lane_ratio"]).
+    prefill_key_lanes: int = 0       # sum of rows x banded key length
+    prefill_key_lanes_full: int = 0  # rows x max_seq (old full-view core)
     pages_in_use: int = 0       # paged: current pool pages held by live slots
     pages_hwm: int = 0          # paged: high-water pages in use
     cache_bytes_hwm: int = 0    # paged: high-water KV bytes actually held
@@ -143,12 +151,17 @@ class EngineStats:
     # prompt positions prefilled inside that tick — the head-of-line metric
     # (admit-stall pays a whole prompt in one tick; the scheduler's entry
     # never exceeds its token budget)
+    tick_key_lanes: List[int] = field(default_factory=list)  # per tick: key
+    # lanes (rows x banded length) the tick's prefill dispatches attended
 
     def phase_report(self) -> Dict[str, float]:
         """Figure-2-style wall-time decomposition, plus decode-tick latency
         percentiles (p50/p99 over the per-tick decode stage) so scheduler
         jitter — a prefill chunk crowding the tick a decoder needed — is
-        observable, not just the aggregate mean."""
+        observable, not just the aggregate mean. When prefill ran,
+        ``prefill_key_lane_ratio`` is the banded core's key-axis work over
+        the old full-``max_seq``-view equivalent — the paper-style phase
+        accounting for the recovered ~max_seq/S prefill factor."""
         rep = {"vision": self.vision_time, "prefill": self.prefill_time,
                "decode": self.decode_time}
         if self.decode_tick_s:
@@ -156,6 +169,9 @@ class EngineStats:
                                                          50))
             rep["decode_tick_p99"] = float(np.percentile(self.decode_tick_s,
                                                          99))
+        if self.prefill_key_lanes_full:
+            rep["prefill_key_lane_ratio"] = (self.prefill_key_lanes
+                                             / self.prefill_key_lanes_full)
         return rep
 
 
@@ -236,17 +252,21 @@ def _jit_prefill_chunk(cfg: ModelConfig, opts: ModelOptions, paged: bool):
     """Chunked-prefill stage: one fixed-shape dispatch per chunk. The chunk
     length is baked in by the embeds shape (jit retraces per shape, and the
     scheduler always pads to ``chunk_size``); ``cache_index``/``n_valid``
-    are dynamic scalars so chunk *position* never recompiles. Caches are
+    are dynamic scalars so chunk *position* never recompiles. ``live``
+    (static, last arg) is the banded attention core's key-axis bound — the
+    engine rounds it up to whole bands, so it takes at most
+    ``max_seq / prefill_band`` distinct values per chunk shape. Caches are
     donated — the engine rebinds the returned tree."""
     if paged:
         return jax.jit(
-            lambda p, e, c, i, nv, pt: M.prefill_chunk(
-                cfg, opts, p, e, c, i, n_valid=nv, page_table=pt),
-            donate_argnums=2)
+            lambda p, e, c, i, nv, pt, live: M.prefill_chunk(
+                cfg, opts, p, e, c, i, n_valid=nv, page_table=pt,
+                live_len=live),
+            donate_argnums=2, static_argnums=6)
     return jax.jit(
-        lambda p, e, c, i, nv: M.prefill_chunk(
-            cfg, opts, p, e, c, i, n_valid=nv),
-        donate_argnums=2)
+        lambda p, e, c, i, nv, live: M.prefill_chunk(
+            cfg, opts, p, e, c, i, n_valid=nv, live_len=live),
+        donate_argnums=2, static_argnums=5)
 
 
 @functools.lru_cache(maxsize=None)
@@ -293,6 +313,18 @@ class ServingEngine:
                 raise ValueError(f"chunk_size {chunk_size} must divide by "
                                  f"page_size {page_size} so chunk writes "
                                  f"start page-aligned")
+            if paged and opts.use_pallas and page_size != opts.prefill_band:
+                # the paged chunk kernel partitions the key axis per page
+                # while the dense kernel (monolithic prefill) partitions per
+                # prefill_band; the chunked==monolithic bit-equality
+                # contract needs one absolute partition on the kernel path
+                raise ValueError(
+                    f"chunked_prefill with paged=True and use_pallas "
+                    f"requires page_size ({page_size}) == "
+                    f"ModelOptions.prefill_band ({opts.prefill_band}): the "
+                    f"paged chunk-prefill kernel blocks the key axis per "
+                    f"page, and bit-equality across chunkings needs the "
+                    f"same partition as the dense kernel's bands")
         self.cfg, self.opts, self.params = cfg, opts, params
         self.n_slots, self.max_seq, self.eos = n_slots, max_seq, eos
         self.prompt_len = prompt_len
@@ -608,6 +640,11 @@ class ServingEngine:
                 req.t_prefill = time.perf_counter()
                 self.stats.prefill_time += req.t_prefill - t0
                 self.stats.prefill_tokens += pos
+                # monolithic prefill attends the banded live prefix too
+                # (model.prefill derives live_len from the prompt shape)
+                self.stats.prefill_key_lanes += pos * band_len(
+                    pos, self.opts.prefill_band, self.max_seq)
+                self.stats.prefill_key_lanes_full += pos * self.max_seq
                 req.ttft_s = req.t_prefill - req.t_submit
                 self.stats.ttft_s.append(req.ttft_s)
                 req.out_tokens.append(tok)
@@ -629,6 +666,9 @@ class ServingEngine:
                         self.stats.queue_s.pop()
                         self.stats.ttft_s.pop()
                         self.stats.prefill_tokens -= pos
+                        self.stats.prefill_key_lanes -= pos * band_len(
+                            pos, self.opts.prefill_band, self.max_seq)
+                        self.stats.prefill_key_lanes_full -= pos * self.max_seq
                         return
                     req.pages_used = len(pages)
                     req.pages_shared = n_shared
@@ -658,11 +698,14 @@ class ServingEngine:
                                "step_fused()/run() (fused only)")
         t_tick = time.perf_counter()
         pf0 = self.stats.prefill_tokens
+        kl0 = self.stats.prefill_key_lanes
         self._admit()
         active = [s for s in range(self.n_slots) if self.slots[s] is not None]
         if not active:
             self.stats.tick_prefill_tokens.append(
                 self.stats.prefill_tokens - pf0)
+            self.stats.tick_key_lanes.append(
+                self.stats.prefill_key_lanes - kl0)
             self.stats.tick_s.append(time.perf_counter() - t_tick)
             return 0
         pt = None
@@ -697,6 +740,8 @@ class ServingEngine:
                 self.tokens[s, 0] = tok
         self.stats.tick_prefill_tokens.append(
             self.stats.prefill_tokens - pf0)
+        self.stats.tick_key_lanes.append(
+            self.stats.prefill_key_lanes - kl0)
         self.stats.tick_s.append(time.perf_counter() - t_tick)
         return len(active)
 
@@ -708,10 +753,13 @@ class ServingEngine:
             return self._tick_chunked()
         t_tick = time.perf_counter()
         pf0 = self.stats.prefill_tokens
+        kl0 = self.stats.prefill_key_lanes
         self._admit()
         emitted = self._decode_tick(self.tick_tokens)
         self.stats.tick_prefill_tokens.append(
             self.stats.prefill_tokens - pf0)
+        self.stats.tick_key_lanes.append(
+            self.stats.prefill_key_lanes - kl0)
         self.stats.tick_s.append(time.perf_counter() - t_tick)
         return emitted
 
@@ -940,15 +988,24 @@ class ServingEngine:
             emb[:, cp.start:cp.start + cp.n_tok])
         start = jnp.asarray(cp.start, jnp.int32)
         n_valid = jnp.asarray(cp.n_tok, jnp.int32)
+        # banded key-axis bound: the chunk attends the live prefix
+        # [0, start + n_tok) rounded up to whole bands — a static jit arg
+        # with at most max_seq / prefill_band distinct values, vs the old
+        # full-max_seq cache view every chunk paid for
+        live = band_len(cp.start + cp.n_tok, self.opts.prefill_band,
+                        self.max_seq)
         if self.paged:
             logits, self.caches = self._prefill_chunk(
-                self.params, chunk, self.caches, start, n_valid, pt_row)
+                self.params, chunk, self.caches, start, n_valid, pt_row,
+                live)
             self.pool.register_prefix_pages(s, task.prefix_keys or (),
                                             cp.start + cp.n_tok)
             self._update_cache_stats()
         else:
             logits, task.cache1 = self._prefill_chunk(
-                self.params, chunk, task.cache1, start, n_valid)
+                self.params, chunk, task.cache1, start, n_valid, live)
+        self.stats.prefill_key_lanes += self.chunk_size * live
+        self.stats.prefill_key_lanes_full += self.chunk_size * self.max_seq
         task.pos = cp.start + cp.n_tok
         task.stalled = False
         self.stats.prefill_tokens += cp.n_tok
@@ -1000,6 +1057,7 @@ class ServingEngine:
         the tick anatomy."""
         t_tick = time.perf_counter()
         pf0 = self.stats.prefill_tokens
+        kl0 = self.stats.prefill_key_lanes
         sched = self.scheduler
         self._admit_chunked()
         n_active = sum(r is not None for r in self.slots)
@@ -1017,6 +1075,8 @@ class ServingEngine:
             self.stats.ticks += 1
         self.stats.tick_prefill_tokens.append(
             self.stats.prefill_tokens - pf0)
+        self.stats.tick_key_lanes.append(
+            self.stats.prefill_key_lanes - kl0)
         self.stats.tick_s.append(time.perf_counter() - t_tick)
         return emitted
 

@@ -5,6 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.chunk_prefill import (chunk_prefill_attention,
+                                         paged_chunk_prefill_attention)
+from repro.kernels.chunk_prefill import ref as cref
 from repro.kernels.decode_attention import (decode_attention,
                                             paged_decode_attention)
 from repro.kernels.decode_attention import ref as dref
@@ -172,6 +175,95 @@ def test_paged_matches_dense_layout():
                                atol=2e-5, rtol=2e-5)
     np.testing.assert_allclose(np.asarray(dense), np.asarray(exp),
                                atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,L,N,K,h,bk", [
+    (2, 16, 256, 8, 2, 64, 128),   # chunk smaller than one band
+    (1, 37, 200, 4, 4, 32, 64),    # odd chunk, L % bk != 0 (masked OOB tail)
+    (2, 8, 96, 6, 2, 32, 32),      # several bands
+    (1, 5, 64, 4, 1, 64, 128),     # bk > L: single clamped block
+])
+@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunk_prefill_attention(B, S, L, N, K, h, bk, window, dtype):
+    """Banded chunk-prefill kernel vs the dense-softmax oracle, with
+    per-slot start positions straddling band boundaries."""
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, S, N, h), dtype)
+    kc = jax.random.normal(ks[1], (B, L, K, h), dtype)
+    vc = jax.random.normal(ks[2], (B, L, K, h), dtype)
+    idx = jax.random.randint(ks[3], (B,), 0, L - S, jnp.int32)
+    out = chunk_prefill_attention(q, kc, vc, idx, window=window, bk=bk,
+                                  interpret=True)
+    exp = cref.chunk_prefill_ref(q, kc, vc, idx, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("start", [0, 15, 16, 17, 31, 47])
+def test_chunk_prefill_band_boundaries(start):
+    """Sweep the chunk start across band-boundary straddles: the first,
+    middle, and last rows of the chunk land in different key blocks."""
+    B, S, L, N, K, h, bk = 1, 9, 64, 4, 2, 32, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, N, h))
+    kc = jax.random.normal(ks[1], (B, L, K, h))
+    vc = jax.random.normal(ks[2], (B, L, K, h))
+    out = chunk_prefill_attention(q, kc, vc, start, bk=bk, interpret=True)
+    exp = cref.chunk_prefill_ref(q, kc, vc, start)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,npg,ps,N,K,h", [
+    (2, 16, 8, 16, 8, 2, 64), (1, 7, 6, 8, 4, 4, 32), (3, 4, 4, 32, 6, 1, 32),
+])
+@pytest.mark.parametrize("window", [0, 40])
+def test_paged_chunk_prefill_attention(B, S, npg, ps, N, K, h, window):
+    """Paged chunk-prefill kernel (page-table gather in the index map, no
+    host-side pool gather) vs the gather-then-dense oracle, scrambled
+    physical page order."""
+    P = B * npg + 3
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, S, N, h))
+    kp = jax.random.normal(ks[1], (P, ps, K, h))
+    vp = jax.random.normal(ks[2], (P, ps, K, h))
+    perm = jax.random.permutation(ks[3], jnp.arange(1, P))[:B * npg]
+    pt = perm.reshape(B, npg).astype(jnp.int32)
+    idx = jax.random.randint(ks[3], (B,), 0, npg * ps - S, jnp.int32)
+    out = paged_chunk_prefill_attention(q, kp, vp, pt, idx, window=window,
+                                        interpret=True)
+    exp = cref.paged_chunk_prefill_ref(q, kp, vp, pt, idx, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("kv_dtype", [jnp.int8, jnp.float8_e4m3fn])
+def test_paged_chunk_prefill_quantized(kv_dtype):
+    """Quantized paged chunk kernel: codes + per-page-per-head scales
+    gathered through the page table, dequantized in the VMEM tile."""
+    from repro.models import kv_quant
+    B, S, npg, ps, N, K, h = 2, 8, 6, 16, 4, 2, 64
+    P = B * npg + 2
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, S, N, h))
+    kp_f = jax.random.normal(ks[1], (P, ps, K, h))
+    vp_f = jax.random.normal(ks[2], (P, ps, K, h))
+    perm = jax.random.permutation(ks[3], jnp.arange(1, P))[:B * npg]
+    pt = perm.reshape(B, npg).astype(jnp.int32)
+    idx = jnp.asarray([3, 70], jnp.int32)
+    kq, ksc = kv_quant.quantize_page_rows(kp_f, kv_dtype)
+    vq, vsc = kv_quant.quantize_page_rows(vp_f, kv_dtype)
+    out = paged_chunk_prefill_attention(q, kq, vq, pt, idx, k_scales=ksc,
+                                        v_scales=vsc, interpret=True)
+    exp = cref.paged_chunk_prefill_ref(q, kq, vq, pt, idx, k_scales=ksc,
+                                       v_scales=vsc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+    full = cref.paged_chunk_prefill_ref(q, kp_f, vp_f, pt, idx)
+    err = float(jnp.abs(out - full).max())
+    budget = 0.05 if kv_dtype == jnp.int8 else 0.2
+    assert err < budget, f"quantization error {err} above {budget}"
 
 
 @pytest.mark.parametrize("B,S,H,P,N,Q", [

@@ -114,6 +114,37 @@ def test_prefix_skip_starts_at_first_nonshared_token():
 # engine-level: bit-equality and edge cases
 # ---------------------------------------------------------------------------
 
+def check_chunk_invariance(chunk, paged, lens):
+    """Greedy streams from a chunked engine must equal the monolithic dense
+    baseline bit-for-bit, for any chunk size and prompt lengths. Driven by
+    the fixed-draw smoke below, and by the hypothesis property in
+    test_property.py with random draws (this module stays importable
+    without hypothesis, so the body is usable in both environments)."""
+    cfg, params = reduced_params("qwen1.5-0.5b")
+    opts = ModelOptions(remat=False)
+    page_size = 4
+    kw = dict(paged=True, page_size=page_size) if paged else {}
+    if paged:                       # chunk writes must start page-aligned
+        chunk = max(page_size, chunk - chunk % page_size)
+    rng = np.random.default_rng(chunk * 101 + len(lens))
+    reqs = [(rng.integers(0, cfg.vocab_size, n, dtype=np.int32), 4)
+            for n in lens]
+    base, _ = _streams(cfg, opts, params, reqs)
+    chunked, _ = _streams(cfg, opts, params, reqs, chunked_prefill=True,
+                          chunk_size=chunk, token_budget=max(16, chunk),
+                          **kw)
+    assert chunked == base, \
+        f"chunk={chunk} paged={paged} lens={lens}: streams diverged"
+
+
+@pytest.mark.parametrize("chunk,paged,lens", [
+    (7, False, [13, 37]),           # odd chunk, non-aligned prompts
+    (10, True, [9, 40, 1]),         # paged, chunk snapped to page multiple
+])
+def test_chunk_invariance_fixed_draws(chunk, paged, lens):
+    check_chunk_invariance(chunk, paged, lens)
+
+
 def test_chunked_matches_monolithic_dense_and_paged(opts):
     """Chunk size that divides nothing (5 into prompts of 13/9/21) must
     still produce greedy streams bit-identical to the admit-stall
@@ -216,6 +247,14 @@ def test_chunked_engine_validations(opts):
     ring = ModelOptions(remat=False, window_cache=True)
     with pytest.raises(ValueError, match="window_cache"):
         ServingEngine(cfg, ring, params, chunked_prefill=True)
+    # kernel path: the paged chunk kernel partitions the key axis per page,
+    # so bit-equality vs the dense kernel's bands needs the two to match
+    pallas = ModelOptions(remat=False, use_pallas=True, prefill_band=32)
+    with pytest.raises(ValueError, match="prefill_band"):
+        ServingEngine(cfg, pallas, params, chunked_prefill=True, paged=True,
+                      page_size=16, chunk_size=16, max_seq=64)
+    ServingEngine(cfg, pallas, params, chunked_prefill=True, paged=True,
+                  page_size=32, chunk_size=32, max_seq=64)  # aligned: fine
     cfg_ssm, params_ssm = reduced_params("mamba2-780m")
     with pytest.raises(ValueError, match="attention-only"):
         ServingEngine(cfg_ssm, opts, params_ssm, chunked_prefill=True)
