@@ -1,0 +1,303 @@
+"""Async serving front-end: streaming bit-equality, prefix-aware replica
+routing, backpressure, and a fleet-scale traffic replay with SLO accounting.
+
+Three gates (violations raise — the CI smoke for ``serving.frontend``; see
+docs/serving.md for the operations guide and docs/benchmarks.md for how to
+read the output) plus a reported-not-gated fleet replay:
+
+1. **Streamed bit-equality.** Greedy token streams collected through the
+   async front-end (single replica, inline ticks) must be bit-identical to
+   the same requests run synchronously through ``ServingEngine.run`` with
+   the identical configuration. The front-end adds arrival dynamics,
+   streaming, and staging — none of which may change what the model says.
+2. **Prefix-aware routing.** On a repeat-observation fleet trace (each
+   robot's control loop resubmits its context prefix), the two-replica
+   front-end must achieve >= the single-replica prefix-hit page count: the
+   router sends a robot's repeats to the replica whose pool holds its
+   prefix pages (``KVPool.match_prefix`` over the content-addressed
+   digests), so scaling out replicas must not dilute the prefix cache.
+3. **Backpressure, not deadlock.** With a tiny ``queue_limit``, flooding
+   submits must raise ``Backpressure`` (with a positive ``retry_after_s``)
+   for the overflow while every *accepted* request still completes with
+   its full token budget.
+
+**Fleet replay (reported).** A Poisson-arrivals x 10 Hz-control-loop x
+long-tail-prompt trace (``core.workload.fleet_trace``) is replayed in real
+time against the front-end; goodput, client-observed TTFT percentiles, and
+control-frequency SLO attainment (action chunk delivered within the
+control period) are emitted and written to ``BENCH_frontend.json`` (schema
+in docs/benchmarks.md) so the perf trajectory is tracked per-PR —
+``perf_compare`` diffs it against a committed baseline when one exists.
+Wall-clock figures are machine-dependent and therefore reported, never
+gated.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.workload import fleet_trace
+from repro.models import model as M
+from repro.models.layers import ModelOptions
+from repro.serving import (AsyncFrontend, Backpressure, Request,
+                           ServingEngine)
+
+DESCRIPTION = ("Async front-end gates: streamed greedy tokens bit-equal to "
+               "the synchronous engine, two-replica prefix-aware routing >= "
+               "the single-replica prefix-hit count on a repeat-observation "
+               "fleet trace, over-limit submits rejected with retry-after "
+               "(not deadlocked); reports goodput / p99 TTFT / 10 Hz "
+               "control-SLO attainment from a Poisson fleet replay into "
+               "BENCH_frontend.json")
+
+ARCH = "smollm-135m"
+MAX_SEQ = 128
+PAGE_SIZE = 16
+N_SLOTS = 2
+CONTROL_HZ = 10.0
+BENCH_PATH = os.path.join(os.environ.get("BENCH_DIR", "."),
+                          "BENCH_frontend.json")
+
+
+def _make_engine(cfg, opts, params, **kw):
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", PAGE_SIZE)
+    kw.setdefault("chunked_prefill", True)
+    kw.setdefault("chunk_size", 16)
+    kw.setdefault("token_budget", 32)
+    return ServingEngine(cfg, opts, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                         eos=-999, fused=True, tick_tokens=4, **kw)
+
+
+def _gate_bit_equality(cfg, opts, params, emit):
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab_size, l, dtype=np.int32), m)
+            for l, m in [(37, 8), (9, 6), (65, 5), (18, 9), (50, 4)]]
+    eng = _make_engine(cfg, opts, params)
+    for i, (p, m) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=p.copy(), max_tokens=m))
+    t0 = time.perf_counter()
+    base = {r.uid: r.out_tokens for r in eng.run()}
+    sync_wall = time.perf_counter() - t0
+    assert len(base) == len(reqs), "sync engine dropped requests"
+
+    async def through_frontend():
+        async with AsyncFrontend([_make_engine(cfg, opts, params)],
+                                 queue_limit=len(reqs) + 1,
+                                 offload_ticks=False) as fe:
+            streams = [await fe.submit(p, m) for p, m in reqs]
+            t0 = time.perf_counter()
+            outs = [await s.tokens() for s in streams]
+            wall = time.perf_counter() - t0
+            await fe.drain()
+            return outs, wall, fe
+
+    outs, wall, fe = asyncio.run(through_frontend())
+    # frontend uids are assigned in submission order, matching base uids
+    assert outs == [base[i] for i in range(len(reqs))], \
+        "streamed greedy tokens diverged from the synchronous engine"
+    n_tok = sum(len(v) for v in base.values())
+    emit("frontend/bit_equal", 1.0,
+         f"requests={len(reqs)};tokens={n_tok};replicas=1;inline_ticks=True")
+    emit("frontend/stream/decode", wall / n_tok * 1e6,
+         f"tok_s={n_tok / wall:.1f};sync_tok_s={n_tok / sync_wall:.1f}")
+    return n_tok
+
+
+def _hit_protocol(fe_engines, trace, queue_limit=64):
+    """Submit every robot's episode request, wait for all of them, then
+    replay the control repeats; return total prefix-hit pages across the
+    replica set. The phase barrier makes the hit count deterministic (a
+    repeat can only hit pages that have been written and registered);
+    submitting the episodes back-to-back (``submit`` has no internal
+    await) makes the warm-phase least-loaded routing a deterministic
+    round-robin, so the robots' prefix pages end up spread across the
+    replicas and the repeat phase exercises real affinity routing."""
+
+    async def run():
+        async with AsyncFrontend(fe_engines, queue_limit=queue_limit,
+                                 offload_ticks=False) as fe:
+            warm = [await fe.submit(e.prompt, e.max_tokens)
+                    for e in trace if e.kind == "episode"]
+            for s in warm:
+                await s.tokens()
+            streams = [await fe.submit(e.prompt, e.max_tokens)
+                       for e in trace if e.kind == "control"]
+            for s in streams:
+                await s.tokens()
+            await fe.drain()
+            return fe
+
+    fe = asyncio.run(run())
+    return sum(eng.stats.prefix_hits for eng in fe_engines), fe
+
+
+def _gate_routing(cfg, opts, params, emit):
+    tail = 4
+    trace = fleet_trace(n_robots=4, steps_per_robot=3,
+                        control_hz=CONTROL_HZ, ctx_median=40, ctx_sigma=0.4,
+                        ctx_max=MAX_SEQ - 16, tail=tail, action_tokens=6,
+                        vocab_size=cfg.vocab_size, seed=3)
+    n_control = sum(e.kind == "control" for e in trace)
+    # a repeat is only *routable* by prefix if its shared context spans at
+    # least one full page — shorter contexts legitimately fall back to
+    # least-loaded (nothing content-addressed to match)
+    routable = sum(e.kind == "control"
+                   and (len(e.prompt) - tail) >= PAGE_SIZE for e in trace)
+    assert routable >= n_control // 2, \
+        f"trace too short-context to exercise routing ({routable} routable)"
+    # pools sized so the LRU never reclaims a cached robot prefix mid-test
+    hits_single, _ = _hit_protocol(
+        [_make_engine(cfg, opts, params, num_pages=96)], trace)
+    hits_multi, fe = _hit_protocol(
+        [_make_engine(cfg, opts, params, num_pages=96) for _ in range(2)],
+        trace)
+    assert hits_multi >= hits_single, \
+        f"two-replica prefix routing hit {hits_multi} pages < " \
+        f"single-replica {hits_single} (router diluting the prefix cache?)"
+    assert fe.stats.routed_prefix >= routable, \
+        f"only {fe.stats.routed_prefix} of {routable} routable control " \
+        f"repeats were routed by prefix affinity"
+    emit("frontend/routing/prefix_hits", float(hits_multi),
+         f"single_replica={hits_single};replicas=2;"
+         f"routed_prefix={fe.stats.routed_prefix};"
+         f"routed_load={fe.stats.routed_load};"
+         f"control_reqs={n_control};routable={routable}")
+    return hits_multi, hits_single
+
+
+def _gate_backpressure(cfg, opts, params, emit):
+    rng = np.random.default_rng(5)
+    limit = 3
+
+    async def flood():
+        async with AsyncFrontend([_make_engine(cfg, opts, params)],
+                                 queue_limit=limit,
+                                 offload_ticks=False) as fe:
+            streams, rejects, retry = [], 0, 0.0
+            for _ in range(limit + 5):
+                try:
+                    streams.append(await fe.submit(
+                        rng.integers(0, cfg.vocab_size, 24, dtype=np.int32),
+                        12))
+                except Backpressure as exc:
+                    rejects += 1
+                    retry = exc.retry_after_s
+            outs = [await s.tokens() for s in streams]
+            await fe.drain()
+            return streams, rejects, retry, outs
+
+    streams, rejects, retry, outs = asyncio.run(flood())
+    assert rejects > 0, "over-limit submits were queued, not rejected"
+    assert retry > 0, "Backpressure carried no retry_after_s estimate"
+    assert len(streams) == limit, \
+        f"accepted {len(streams)} != queue_limit {limit}"
+    assert all(len(o) == 12 for o in outs), \
+        "an accepted request did not complete after backpressure engaged"
+    emit("frontend/backpressure", float(rejects),
+         f"limit={limit};accepted={len(streams)};"
+         f"retry_after_s={retry:.4f};accepted_all_completed=True")
+
+
+def _fleet_replay(cfg, opts, params, emit):
+    """Real-time replay of a Poisson x 10 Hz x long-tail trace on two
+    replicas; returns the report dict (reported, never gated: wall clock)."""
+    trace = fleet_trace(n_robots=6, steps_per_robot=4,
+                        control_hz=CONTROL_HZ, arrival_rate=4.0,
+                        ctx_median=32, ctx_sigma=0.6, ctx_max=MAX_SEQ - 16,
+                        tail=4, action_tokens=8, vocab_size=cfg.vocab_size,
+                        seed=11)
+
+    async def replay():
+        engines = [_make_engine(cfg, opts, params) for _ in range(2)]
+        async with AsyncFrontend(engines, queue_limit=16) as fe:
+            t0 = time.perf_counter()
+            results = []        # (event, stream | None)
+            for e in trace:
+                delay = e.t - (time.perf_counter() - t0)
+                if delay > 0:
+                    await asyncio.sleep(delay)
+                try:
+                    results.append((e, await fe.submit(e.prompt,
+                                                       e.max_tokens)))
+                except Backpressure as exc:
+                    # fleet clients back off and drop the stale observation
+                    # (a control step re-sent after its period is useless)
+                    results.append((e, None))
+                    await asyncio.sleep(min(exc.retry_after_s, 0.05))
+            for _, s in results:
+                if s is not None:
+                    await s.tokens()
+            await fe.drain()
+            wall = time.perf_counter() - t0
+            return results, wall, fe, engines
+
+    results, wall, fe, engines = asyncio.run(replay())
+    served = [(e, s) for e, s in results if s is not None]
+    n_tok = sum(len(s.request.out_tokens) for _, s in served)
+    slo_met = [s.t_done - s.t_submit <= e.deadline_s for e, s in served]
+    control = [(e, s) for e, s in served if e.kind == "control"]
+    control_met = sum(s.t_done - s.t_submit <= e.deadline_s
+                      for e, s in control)
+    rep = fe.stats.report()
+    report = {
+        "bench": "frontend",
+        "schema": 1,
+        "arch": ARCH,
+        "replicas": len(engines),
+        "control_hz": CONTROL_HZ,
+        "n_requests": len(trace),
+        "n_served": len(served),
+        "n_rejected": fe.stats.rejected,
+        "wall_s": wall,
+        "goodput_rps": sum(slo_met) / wall,
+        "goodput_tok_s": n_tok / wall,
+        "slo_attainment": (sum(slo_met) / len(served)) if served else 0.0,
+        "control_slo_attainment": (control_met / len(control)
+                                   if control else 0.0),
+        "ttft_p50_s": rep.get("ttft_p50_s", 0.0),
+        "ttft_p99_s": rep.get("ttft_p99_s", 0.0),
+        "latency_p99_s": rep.get("latency_p99_s", 0.0),
+        "prefix_hits": sum(eng.stats.prefix_hits for eng in engines),
+        "routed_prefix": fe.stats.routed_prefix,
+    }
+    emit("frontend/fleet/goodput", report["goodput_rps"],
+         f"tok_s={report['goodput_tok_s']:.1f};served={len(served)}"
+         f"/{len(trace)};rejected={report['n_rejected']};"
+         f"reported_not_gated=True")
+    emit("frontend/fleet/ttft_p99", report["ttft_p99_s"] * 1e6,
+         f"p50={report['ttft_p50_s'] * 1e6:.0f}us;"
+         f"latency_p99={report['latency_p99_s'] * 1e6:.0f}us;"
+         f"reported_not_gated=True")
+    emit("frontend/fleet/slo_attainment", report["slo_attainment"],
+         f"control={report['control_slo_attainment']:.3f};"
+         f"hz={CONTROL_HZ};reported_not_gated=True")
+    return report
+
+
+def run(emit):
+    cfg = get_config(ARCH).reduced()
+    opts = ModelOptions(remat=False)
+    params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+
+    n_tok = _gate_bit_equality(cfg, opts, params, emit)
+    hits_multi, hits_single = _gate_routing(cfg, opts, params, emit)
+    _gate_backpressure(cfg, opts, params, emit)
+    report = _fleet_replay(cfg, opts, params, emit)
+
+    report["bit_equal"] = True
+    report["routing_prefix_hits"] = hits_multi
+    report["routing_single_replica_hits"] = hits_single
+    with open(BENCH_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("frontend/bench_json", float(report["n_served"]),
+         f"path={BENCH_PATH};schema=1")

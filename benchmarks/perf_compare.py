@@ -1,21 +1,70 @@
 """§Perf: baseline-vs-optimized comparison for every tagged hillclimb
-artifact (artifacts/dryrun/*-<tag>.json vs the untagged baseline)."""
+artifact (artifacts/dryrun/*-<tag>.json vs the untagged baseline), plus
+BENCH_*.json trajectory diffs against the committed baselines in
+``benchmarks/baselines/`` (see docs/benchmarks.md for the schema).
+
+Both halves are *reported, never gated*: wall-clock figures move with the
+machine, so the ledger exists to make drift visible in the bench output
+and the uploaded CI artifacts, not to fail a quiet runner for being slower
+than the box that committed the baseline."""
 from __future__ import annotations
 
-DESCRIPTION = ("Baseline-vs-optimized roofline deltas for every tagged "
-               "hillclimb artifact (perf regression ledger)")
+DESCRIPTION = ("Perf regression ledger: roofline deltas for every tagged "
+               "hillclimb artifact, plus BENCH_*.json diffs against the "
+               "committed baselines in benchmarks/baselines/ "
+               "(reported, not gated)")
 
 import json
 import os
 
 ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+BENCH_DIR = os.environ.get("BENCH_DIR", ".")
+BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
 
 
 def _key(row):
     return (row["arch"], row["shape"], row["mesh"])
 
 
+def _compare_bench_json(emit):
+    """Diff every BENCH_*.json in ``BENCH_DIR`` against the same-named
+    committed baseline, field by numeric field. Missing artifacts or
+    baselines are skipped silently — a bench that didn't run this session
+    has nothing to compare, and a bench without a committed baseline is
+    simply not tracked yet."""
+    if not os.path.isdir(BASELINES):
+        return
+    for fname in sorted(os.listdir(BASELINES)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        cur_path = os.path.join(BENCH_DIR, fname)
+        if not os.path.isfile(cur_path):
+            continue
+        with open(os.path.join(BASELINES, fname)) as f:
+            ref = json.load(f)
+        with open(cur_path) as f:
+            cur = json.load(f)
+        bench = cur.get("bench", fname[len("BENCH_"):-len(".json")])
+        if cur.get("schema") != ref.get("schema"):
+            emit(f"perf/bench/{bench}/schema", float(cur.get("schema", 0)),
+                 f"baseline_schema={ref.get('schema')};regenerate baseline")
+            continue
+        for field in sorted(ref):
+            if field == "schema":
+                continue
+            rv, cv = ref[field], cur.get(field)
+            if isinstance(rv, bool) or not isinstance(rv, (int, float)):
+                continue
+            if not isinstance(cv, (int, float)) or isinstance(cv, bool):
+                continue
+            ratio = cv / rv if rv else 0.0
+            emit(f"perf/bench/{bench}/{field}", float(cv),
+                 f"baseline={rv:.6g};ratio={ratio:.3f};"
+                 f"reported_not_gated=True")
+
+
 def run(emit):
+    _compare_bench_json(emit)
     if not os.path.isdir(ART):
         emit("perf/missing", 0.0, "run repro.launch.sweep first")
         return

@@ -16,8 +16,8 @@ import traceback
 
 from benchmarks import (claims_check, decode_microbench, engine_bench,
                         fig2_phase_latency, fig3_control_frequency,
-                        kv_cache_bench, perf_compare, roofline_report,
-                        scheduler_bench, table1_hardware)
+                        frontend_bench, kv_cache_bench, perf_compare,
+                        roofline_report, scheduler_bench, table1_hardware)
 
 MODULES = {
     "claims": claims_check,
@@ -30,6 +30,7 @@ MODULES = {
     "engine": engine_bench,
     "kv_cache": kv_cache_bench,
     "scheduler": scheduler_bench,
+    "frontend": frontend_bench,
 }
 
 

@@ -1,10 +1,20 @@
-"""Operator-level workload IR for the XPU simulator.
+"""Workloads: the operator-level IR for the XPU simulator, and the fleet
+traffic generator for the serving front-end.
 
-A VLA inference step is decomposed exactly as the paper's Figure 1:
-vision encoding -> generation (prefill + autoregressive CoT decode) ->
-action generation (action-token decode or DiT iterations). Each phase is a
-list of ``Op``s (einsum-level granularity, like the paper's simulator), with
-FLOPs and bytes derived analytically from the ModelConfig.
+**Operator IR.** A VLA inference step is decomposed exactly as the paper's
+Figure 1: vision encoding -> generation (prefill + autoregressive CoT
+decode) -> action generation (action-token decode or DiT iterations). Each
+phase is a list of ``Op``s (einsum-level granularity, like the paper's
+simulator), with FLOPs and bytes derived analytically from the ModelConfig.
+
+**Fleet traces** (``fleet_trace``). The serving front-end's workload is a
+robot fleet, not a static request list: robots join as a Poisson process,
+each then runs a periodic control loop (the paper's fig3 control-frequency
+scenarios — 10 Hz is the canonical target) whose every step resubmits the
+robot's observation context plus a small per-step delta, and context
+lengths are long-tailed across robots. The generator is deterministic per
+seed, so a trace is a reproducible benchmark input (same seed -> the same
+arrival times, prompts, and deadlines, bit for bit).
 """
 from __future__ import annotations
 
@@ -231,3 +241,95 @@ def workload_totals(phases: List[Phase]) -> Dict[str, float]:
         "flops": sum(p.flops for p in phases),
         "bytes": sum(p.bytes for p in phases),
     }
+
+
+# ---------------------------------------------------------------------------
+# fleet traffic traces (serving front-end workloads)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FleetRequest:
+    """One request of a fleet trace, in arrival order.
+
+    ``t`` is the arrival offset from trace start (seconds; the replayer
+    submits at ``t`` and measures SLO attainment against ``t +
+    deadline_s``). ``kind`` is ``"episode"`` for a robot's first request
+    (cold prefix — the prompt's context pages are not in any pool yet) and
+    ``"control"`` for the periodic repeats, whose prompt shares the
+    robot's full context prefix and differs only in the last
+    ``tail`` positions — the repeat-observation pattern the prefix cache
+    and the front-end's replica routing are built around."""
+    t: float
+    robot: int
+    step: int                 # control-loop step index (0 = episode start)
+    kind: str                 # "episode" | "control"
+    prompt: np.ndarray        # [ctx + tail] int32
+    max_tokens: int           # action chunk length to decode
+    deadline_s: float         # complete within t + deadline_s (SLO)
+
+
+def fleet_trace(n_robots: int = 8,
+                steps_per_robot: int = 5,
+                control_hz: float = 10.0,
+                arrival_rate: float = 4.0,
+                ctx_median: int = 32,
+                ctx_sigma: float = 0.6,
+                ctx_max: int = 96,
+                tail: int = 4,
+                action_tokens: int = 8,
+                vocab_size: int = 1000,
+                seed: int = 0) -> List[FleetRequest]:
+    """Deterministic robot-fleet trace: Poisson arrivals x periodic control
+    loops x long-tail context lengths.
+
+    - **Arrivals.** Robot ``r`` joins at the r-th event of a Poisson
+      process with rate ``arrival_rate`` robots/s (exponential
+      inter-arrival times).
+    - **Control loop.** From its join time, each robot issues
+      ``steps_per_robot`` requests at period ``1 / control_hz``. Every
+      request's prompt is the robot's fixed context (camera frame +
+      instruction surrogate) followed by ``tail`` fresh per-step tokens;
+      step 0 is the cold ``"episode"`` request, later steps are
+      ``"control"`` repeats whose context prefix is prefix-cache shareable.
+    - **Long-tail lengths.** Context lengths are lognormal
+      (``ctx_median`` median, ``ctx_sigma`` log-stdev), clipped to
+      ``[tail + 1, ctx_max]`` — a few robots carry much longer contexts
+      than the median, the tail that makes admission policy matter.
+    - **Deadlines.** Control requests must complete within one control
+      period (produce the action chunk before the next observation);
+      episode requests get 10 periods (episode startup is not
+      latency-critical at the control rate).
+
+    Returns the trace sorted by arrival time (ties broken by robot id,
+    then step — total order, so replay order is deterministic too). All
+    randomness flows from one ``np.random.default_rng(seed)``: the same
+    arguments give the same trace, bit for bit, on any platform numpy
+    supports (gated by a seeded-replay unit test).
+    """
+    if n_robots < 1:
+        raise ValueError(f"n_robots must be >= 1, got {n_robots}")
+    if control_hz <= 0 or arrival_rate <= 0:
+        raise ValueError("control_hz and arrival_rate must be positive")
+    rng = np.random.default_rng(seed)
+    period = 1.0 / control_hz
+    trace: List[FleetRequest] = []
+    t_join = 0.0
+    for r in range(n_robots):
+        t_join += float(rng.exponential(1.0 / arrival_rate))
+        ctx_len = int(np.clip(
+            np.rint(rng.lognormal(np.log(ctx_median), ctx_sigma)),
+            tail + 1, ctx_max))
+        ctx = rng.integers(0, vocab_size, ctx_len, dtype=np.int32)
+        for step in range(steps_per_robot):
+            prompt = np.concatenate(
+                [ctx, rng.integers(0, vocab_size, tail, dtype=np.int32)])
+            trace.append(FleetRequest(
+                t=t_join + step * period,
+                robot=r,
+                step=step,
+                kind="episode" if step == 0 else "control",
+                prompt=prompt,
+                max_tokens=action_tokens,
+                deadline_s=period if step else 10 * period))
+    trace.sort(key=lambda e: (e.t, e.robot, e.step))
+    return trace

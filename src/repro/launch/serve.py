@@ -1,15 +1,24 @@
-"""Serving driver: continuous-batching engine over synthetic requests.
+"""Serving driver: continuous-batching engine over synthetic requests,
+optionally fronted by the asyncio fleet front-end.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 16 --slots 4 --reduced
 
+    # two replicas behind the async front-end, replaying a Poisson x
+    # 10 Hz control-loop fleet trace with prefix-aware routing
+    PYTHONPATH=src python -m repro.launch.serve --reduced --paged \
+        --chunked-prefill --frontend --replicas 2 --fleet --robots 6
+
 Reports per-request phase latencies (queue / prefill / decode) — the
 serving-side counterpart of the paper's phase decomposition — plus
-aggregate throughput.
+aggregate throughput. Front-end mode adds client-observed TTFT/latency
+percentiles, routing and backpressure counters, and control-frequency SLO
+attainment (see docs/serving.md for the full flag reference).
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -17,9 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.workload import fleet_trace
 from repro.models import model as M
 from repro.models.layers import ModelOptions
-from repro.serving import Request, ServingEngine
+from repro.serving import AsyncFrontend, Backpressure, Request, ServingEngine
 
 
 def main(argv=None):
@@ -69,6 +79,38 @@ def main(argv=None):
                         "attention core: prefill key-axis work covers the "
                         "live prefix rounded up to this block instead of "
                         "max_seq (see docs/scheduler.md)")
+    p.add_argument("--frontend", action="store_true",
+                   help="drive the engine(s) through the asyncio front-end "
+                        "(streaming, cancellation, bounded admission, "
+                        "prefix-aware replica routing; see docs/serving.md)")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="engine replicas behind the front-end (requires "
+                        "--frontend)")
+    p.add_argument("--queue-limit", type=int, default=64,
+                   help="per-replica admission bound: staged + pending "
+                        "requests beyond this are rejected with a "
+                        "retry-after estimate (requires --frontend)")
+    p.add_argument("--inline-ticks", action="store_true",
+                   help="tick replicas inline on the event loop instead of "
+                        "worker threads: fully deterministic, but replicas "
+                        "no longer tick in parallel (requires --frontend)")
+    p.add_argument("--fleet", action="store_true",
+                   help="replay a Poisson-arrivals x control-loop fleet "
+                        "trace in real time instead of the synthetic batch "
+                        "(requires --frontend); reports control-frequency "
+                        "SLO attainment")
+    p.add_argument("--robots", type=int, default=6,
+                   help="fleet robots (requires --fleet)")
+    p.add_argument("--steps-per-robot", type=int, default=4,
+                   help="control-loop steps per robot, episode included "
+                        "(requires --fleet)")
+    p.add_argument("--control-hz", type=float, default=10.0,
+                   help="control-loop frequency: one repeat-observation "
+                        "request per robot per period, deadline one period "
+                        "(requires --fleet)")
+    p.add_argument("--arrival-rate", type=float, default=4.0,
+                   help="Poisson robot-arrival rate, robots/s (requires "
+                        "--fleet)")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -78,16 +120,22 @@ def main(argv=None):
                         prefill_band=args.prefill_band)
     params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
-    eng = ServingEngine(cfg, opts, params, n_slots=args.slots,
-                        max_seq=args.max_seq, eos=-1,
-                        fused=not args.reference,
-                        tick_tokens=args.tick_tokens,
-                        paged=args.paged, page_size=args.page_size,
-                        num_pages=args.num_pages or None,
-                        kv_dtype=args.kv_dtype,
-                        chunked_prefill=args.chunked_prefill,
-                        chunk_size=args.chunk_size,
-                        token_budget=args.token_budget)
+
+    def make_engine():
+        return ServingEngine(cfg, opts, params, n_slots=args.slots,
+                             max_seq=args.max_seq, eos=-1,
+                             fused=not args.reference,
+                             tick_tokens=args.tick_tokens,
+                             paged=args.paged, page_size=args.page_size,
+                             num_pages=args.num_pages or None,
+                             kv_dtype=args.kv_dtype,
+                             chunked_prefill=args.chunked_prefill,
+                             chunk_size=args.chunk_size,
+                             token_budget=args.token_budget)
+
+    if args.frontend:
+        return asyncio.run(_main_frontend(args, cfg, make_engine))
+    eng = make_engine()
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -128,6 +176,74 @@ def main(argv=None):
               f"decode {r.t_done - r.t_prefill:.3f}s "
               f"({len(r.out_tokens)} tokens)")
     return done
+
+
+async def _main_frontend(args, cfg, make_engine):
+    """Front-end mode: replicas behind AsyncFrontend, fed either the
+    synthetic batch or a real-time fleet-trace replay (--fleet)."""
+    engines = [make_engine() for _ in range(args.replicas)]
+    async with AsyncFrontend(engines, queue_limit=args.queue_limit,
+                             offload_ticks=not args.inline_ticks) as fe:
+        t0 = time.time()
+        if args.fleet:
+            # prompt (ctx + 4-token tail) + generated actions must fit the
+            # engine's max_seq
+            ctx_max = args.max_seq - args.max_tokens - 8
+            trace = fleet_trace(n_robots=args.robots,
+                                steps_per_robot=args.steps_per_robot,
+                                control_hz=args.control_hz,
+                                arrival_rate=args.arrival_rate,
+                                ctx_max=ctx_max,
+                                action_tokens=args.max_tokens,
+                                vocab_size=cfg.vocab_size, seed=0)
+            served = []         # (event, stream)
+            for e in trace:
+                delay = e.t - (time.time() - t0)
+                if delay > 0:
+                    await asyncio.sleep(delay)
+                try:
+                    served.append((e, await fe.submit(e.prompt,
+                                                      e.max_tokens)))
+                except Backpressure as exc:
+                    # a control step re-sent after its period is stale:
+                    # drop it, back off for the front-end's estimate
+                    await asyncio.sleep(min(exc.retry_after_s, 0.05))
+            streams = [s for _, s in served]
+        else:
+            rng = np.random.default_rng(0)
+            streams = [await fe.submit(
+                rng.integers(0, cfg.vocab_size, args.prompt_len,
+                             dtype=np.int32), args.max_tokens)
+                for _ in range(args.requests)]
+        for s in streams:
+            await s.tokens()
+        await fe.drain()
+        wall = time.time() - t0
+    toks = sum(len(s.request.out_tokens) for s in streams)
+    rep = fe.stats.report()
+    print(f"[serve] frontend: {rep['completed']} requests, {toks} tokens "
+          f"in {wall:.2f}s ({toks / wall:.1f} tok/s aggregate, "
+          f"{args.replicas} replica(s))")
+    print(f"[serve] routing: prefix={rep['routed_prefix']} "
+          f"load={rep['routed_load']} rejected={rep['rejected']} "
+          f"cancelled={rep['cancelled']}")
+    if "ttft_p50_s" in rep:
+        print(f"[serve] client TTFT p50={rep['ttft_p50_s']:.3f}s "
+              f"p99={rep['ttft_p99_s']:.3f}s "
+              f"latency_p99={rep.get('latency_p99_s', 0.0):.3f}s")
+    if args.fleet:
+        met = sum(s.t_done - s.t_submit <= e.deadline_s for e, s in served)
+        ctrl = [(e, s) for e, s in served if e.kind == "control"]
+        ctrl_met = sum(s.t_done - s.t_submit <= e.deadline_s
+                       for e, s in ctrl)
+        print(f"[serve] fleet SLO: {met}/{len(served)} in deadline "
+              f"(control {ctrl_met}/{len(ctrl)} at {args.control_hz} Hz)")
+    for i, eng in enumerate(engines):
+        st = eng.stats
+        print(f"  replica {i}: decode_tokens={st.tokens_decoded} "
+              f"prefill_tokens={st.prefill_tokens} "
+              f"skipped={st.prefill_skipped} prefix_hits={st.prefix_hits}")
+    return streams
 
 
 if __name__ == "__main__":

@@ -1,9 +1,14 @@
-from repro.serving.engine import EngineStats, Request, ServingEngine
+from repro.serving.engine import (EngineStats, Request, ServingEngine,
+                                  prefix_page_keys)
+from repro.serving.frontend import (AsyncFrontend, Backpressure,
+                                    FrontendStats, TokenStream)
 from repro.serving.kv_pool import KVPool, PoolExhausted
 from repro.serving.sampler import greedy, sample, sample_token
 from repro.serving.scheduler import (ChunkedScheduler, ChunkPlan,
                                      PrefillTask, TickPlan)
 
-__all__ = ["ChunkedScheduler", "ChunkPlan", "EngineStats", "KVPool",
-           "PoolExhausted", "PrefillTask", "Request", "ServingEngine",
-           "TickPlan", "greedy", "sample", "sample_token"]
+__all__ = ["AsyncFrontend", "Backpressure", "ChunkedScheduler", "ChunkPlan",
+           "EngineStats", "FrontendStats", "KVPool", "PoolExhausted",
+           "PrefillTask", "Request", "ServingEngine", "TickPlan",
+           "TokenStream", "greedy", "prefix_page_keys", "sample",
+           "sample_token"]

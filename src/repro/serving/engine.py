@@ -88,6 +88,7 @@ class Request:
     patches: Optional[np.ndarray] = None
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    cancelled: bool = False            # aborted via ServingEngine.cancel()
     t_submit: float = 0.0
     t_prefill: float = 0.0
     t_done: float = 0.0
@@ -161,7 +162,12 @@ class EngineStats:
         observable, not just the aggregate mean. When prefill ran,
         ``prefill_key_lane_ratio`` is the banded core's key-axis work over
         the old full-``max_seq``-view equivalent — the paper-style phase
-        accounting for the recovered ~max_seq/S prefill factor."""
+        accounting for the recovered ~max_seq/S prefill factor. Per-request
+        queue-wait and TTFT percentiles (``queue_p50/p99``, ``ttft_p50/p99``,
+        seconds, present once any request reached the respective boundary)
+        make a stalled fleet diagnosable from a front-end log line: a
+        growing queue_p99 with flat decode percentiles means admission is
+        starved (pool pressure / backlog), not that decode got slower."""
         rep = {"vision": self.vision_time, "prefill": self.prefill_time,
                "decode": self.decode_time}
         if self.decode_tick_s:
@@ -169,10 +175,46 @@ class EngineStats:
                                                          50))
             rep["decode_tick_p99"] = float(np.percentile(self.decode_tick_s,
                                                          99))
+        for name, samples in (("queue", self.queue_s), ("ttft", self.ttft_s)):
+            if samples:
+                rep[f"{name}_p50"] = float(np.percentile(samples, 50))
+                rep[f"{name}_p99"] = float(np.percentile(samples, 99))
         if self.prefill_key_lanes_full:
             rep["prefill_key_lane_ratio"] = (self.prefill_key_lanes
                                              / self.prefill_key_lanes_full)
         return rep
+
+
+def prefix_page_keys(cfg_name: str, page_size: int, kv_dtype: str,
+                     prompt: np.ndarray, patches: Optional[np.ndarray] = None,
+                     n_prefix: int = 0) -> List[bytes]:
+    """Prefix-closed digests, one per *full* page of a request's prompt
+    prefix — the content address a ``KVPool`` shares pages under.
+
+    Key ``i`` covers every input that determines KV for positions
+    ``[0, (i+1)*page_size)``: the vision patches (one digest, repeated over
+    the ``n_prefix`` positions they fill) and the prompt tokens so far. The
+    seed also covers the model name, page size, and pool storage dtype, so
+    two pools can only ever share pages when their page contents would be
+    bit-identical for identical prompts.
+
+    Module-level (not an engine method) because the digest is also the
+    *routing key*: ``serving.frontend`` computes it per candidate replica
+    before any engine owns the request, and routes repeat observations to
+    the replica whose pool already holds the prefix pages.
+    """
+    h = hashlib.sha1(f"{cfg_name}:{page_size}:{kv_dtype}".encode())
+    items: List[bytes] = []
+    if n_prefix:
+        pd = hashlib.sha1(np.ascontiguousarray(patches).tobytes()).digest()
+        items.extend([pd] * n_prefix)
+    items.extend(int(t).to_bytes(8, "little", signed=True) for t in prompt)
+    keys = []
+    for i, item in enumerate(items):
+        h.update(item)
+        if (i + 1) % page_size == 0:
+            keys.append(h.digest())
+    return keys
 
 
 def _fused_tick(cfg: ModelConfig, opts: ModelOptions, K: int, eos: int,
@@ -410,32 +452,71 @@ class ServingEngine:
             n += self.scheduler.pending
         return n
 
+    def cancel(self, uid: int) -> bool:
+        """Abort request ``uid`` mid-flight, wherever it is in the pipeline.
+
+        Call between ticks (the front-end stages cancellations and drains
+        them at tick boundaries — never while a tick is in flight in another
+        thread). Three cases, each leaving the engine in the same state as
+        if the request had never been admitted past that point:
+
+        - **queued** (waiting list / legacy queue): removed, nothing else
+          held.
+        - **mid-prefill** (chunked mode, a live ``PrefillTask``): the task
+          is dropped without requeue and the slot's pool pages are freed.
+          Full prompt pages the aborted chunks already registered in the
+          prefix cache are *retained* (refcount 0, LRU) — their KV is
+          written and correct, so a later identical observation still hits.
+        - **mid-decode** (live slot): the slot is cleared and its pages are
+          freed. The slot's table row resets to the null page, so if a
+          fused tick is already compiled against the old snapshot the stale
+          writes sink harmlessly (same mechanism as a finished slot riding
+          through a tick).
+
+        The request is marked ``cancelled`` and is *not* appended to
+        ``finished``; pool accounting (``pages_in_use``) returns to what it
+        was before the request was admitted, minus retained cache pages.
+        Returns whether the uid was found live anywhere."""
+        if self.scheduler is not None:
+            for k, r in enumerate(self.scheduler.waiting):
+                if r.uid == uid:
+                    self.scheduler.waiting.pop(k)
+                    r.cancelled = True
+                    return True
+            for s, t in list(self.scheduler.tasks.items()):
+                if t.req.uid == uid:
+                    self.scheduler.tasks.pop(s)
+                    if self.paged:
+                        self.pool.free_slot(s)
+                        self._update_cache_stats()
+                    t.req.cancelled = True
+                    return True
+        else:
+            for k, r in enumerate(self.queue):
+                if r.uid == uid:
+                    self.queue.pop(k)
+                    r.cancelled = True
+                    return True
+        for s in range(self.n_slots):
+            req = self.slots[s]
+            if req is not None and req.uid == uid:
+                self.slots[s] = None
+                if self.paged:
+                    self.pool.free_slot(s)
+                    self._update_cache_stats()
+                req.cancelled = True
+                return True
+        return False
+
     # -- paged bookkeeping ------------------------------------------------
     def _prefix_page_keys(self, req: Request, n_prefix: int) -> List[bytes]:
-        """Prefix-closed digests, one per *full* page of the prompt prefix.
-        Key i covers every input that determines KV for positions
-        [0, (i+1)*page_size): the vision patches (one digest, repeated over
-        the prefix positions they fill) and the prompt tokens so far. The
-        seed also covers the pool storage dtype, so a bf16 pool and an
-        int8/fp8 pool can never share pages (their page contents differ
-        bit-for-bit even for identical prompts)."""
+        """Prefix-closed digests for ``req``'s full prompt pages (see the
+        module-level ``prefix_page_keys`` — same function, engine config
+        baked in). Empty when the prefix cache is disabled."""
         if not self.prefix_cache:
             return []
-        h = hashlib.sha1(
-            f"{self.cfg.name}:{self.page_size}:{self.kv_dtype}".encode())
-        items: List[bytes] = []
-        if n_prefix:
-            pd = hashlib.sha1(
-                np.ascontiguousarray(req.patches).tobytes()).digest()
-            items.extend([pd] * n_prefix)
-        items.extend(int(t).to_bytes(8, "little", signed=True)
-                     for t in req.prompt)
-        keys = []
-        for i, item in enumerate(items):
-            h.update(item)
-            if (i + 1) % self.page_size == 0:
-                keys.append(h.digest())
-        return keys
+        return prefix_page_keys(self.cfg.name, self.page_size, self.kv_dtype,
+                                req.prompt, req.patches, n_prefix)
 
     def _update_cache_stats(self):
         st, pool = self.stats, self.pool
@@ -595,6 +676,25 @@ class ServingEngine:
         self.slots[s] = None
 
     def _admit(self):
+        """Monolithic (admit-stall) admission: pop the queue head into every
+        free slot, running its *whole* prompt through one prefill dispatch.
+
+        Per admitted request, in order: (1) capacity check —
+        ``KVPool.can_admit`` over the prompt pages *plus the first decode
+        write* must pass before anything is paid for (a deferred request
+        must not waste a vision pass); (2) vision, as its own jitted stage
+        so phase accounting survives; (3) batch-1 prefill + first-token
+        sample (the TTFT boundary); (4) page allocation + page-wise scatter
+        (paged) or batch-row scatter (dense). A request that already
+        finishes at prefill (EOS first token / ``max_tokens <= 1`` / no
+        cache headroom) never takes a slot — the inner loop retries the
+        same slot with the next queued request.
+
+        Atomicity under pool races: ``can_admit`` ran before vision+prefill,
+        but a retained cache page can be reclaimed in between, so a raising
+        ``admit`` rolls back every stat this attempt recorded (queue/TTFT
+        samples, prefill token and key-lane counters) and requeues the
+        request at the front — the retry must not double-count."""
         for s in range(self.n_slots):
             # the inner loop retries the slot when a request already finishes
             # at prefill (EOS first token, or max_tokens == 1)
@@ -1054,7 +1154,34 @@ class ServingEngine:
         """One scheduler tick: admit waiting requests into prefill tasks,
         pack chunks + decode under the token budget, run the chunks, then
         the (budget-capped) fused decode stage. See docs/scheduler.md for
-        the tick anatomy."""
+        the tick anatomy.
+
+        Stage order and the invariants each stage hands the next:
+
+        1. **Admit** (``_admit_chunked``): every free slot without a task
+           gets one, pages for shared prefix + first chunk allocated. After
+           this, ``scheduler.tasks`` names exactly the mid-prefill slots.
+        2. **Plan** (``ChunkedScheduler.plan_tick``): pure policy over host
+           state — decode reservation first
+           (``decode_steps = clamp(budget // n_active, 1, tick_tokens)``),
+           then FCFS chunks into the remainder. ``n_active`` is read
+           *before* chunks run, so a prefill finishing mid-tick joins this
+           same tick's decode stage without shrinking anyone's reservation.
+        3. **Chunks** (``_run_chunk`` per plan entry): each entry is
+           validated against live state first — the task may have been
+           preempted/finished by an earlier entry this tick, or an earlier
+           chunk of the same task may have stalled on pool pressure
+           (``cp.task.pos != cp.start`` — positions must be written in
+           order, so the successor chunk is dropped and replanned next
+           tick rather than leaving a hole in the cache).
+        4. **Decode** (``_decode_tick(plan.decode_steps)``): the fused tick
+           capped at the planned depth — a dynamic operand, so the budget
+           never recompiles the loop.
+
+        Per-tick stats appended here (``tick_prefill_tokens``,
+        ``tick_key_lanes``, ``tick_s``) are the head-of-line metrics the
+        scheduler bench gates on: no tick's prefill may exceed the token
+        budget."""
         t_tick = time.perf_counter()
         pf0 = self.stats.prefill_tokens
         kl0 = self.stats.prefill_key_lanes
@@ -1092,11 +1219,24 @@ class ServingEngine:
         if self.pending:
             queued = (len(self.scheduler.waiting) if self.scheduler
                       else len(self.queue))
+            # Surface the phase/queue/TTFT decomposition alongside the count:
+            # a stalled fleet is diagnosed from this one line (growing
+            # queue_p99 with flat decode percentiles = admission starvation;
+            # the reverse = the decode path itself slowed down).
+            ph = self.stats.phase_report()
+            diag = (f"phases vision={ph['vision']:.3f}s "
+                    f"prefill={ph['prefill']:.3f}s "
+                    f"decode={ph['decode']:.3f}s")
+            for k in ("queue_p50", "queue_p99", "ttft_p50", "ttft_p99",
+                      "decode_tick_p99"):
+                if k in ph:
+                    diag += f"; {k}={ph[k]:.4f}s"
             warnings.warn(
                 f"ServingEngine.run: tick budget ({max_ticks}) exhausted "
                 f"with {self.pending} requests pending "
                 f"({queued} queued, "
-                f"{sum(r is not None for r in self.slots)} in flight)",
+                f"{sum(r is not None for r in self.slots)} in flight; "
+                f"{diag})",
                 RuntimeWarning, stacklevel=2)
         return self.finished
 

@@ -107,6 +107,22 @@ class ChunkedScheduler:
     engine owns slots, pools, and device state. ``stalled`` tasks (pool
     pressure on their last attempt) are planned after healthy tasks and
     retried every tick until pages free up or they are evicted.
+
+    Invariants the engine relies on:
+
+    - ``tasks`` is keyed by slot and a slot holds at most one in-flight
+      prefill (asserted in ``start_task``); a slot is *either* decoding
+      or mid-prefill, never both.
+    - ``seq`` is monotone in admission order, so the FCFS tiebreak in
+      ``plan_tick`` is stable across ticks — a task's chunk priority
+      never changes while it is in flight.
+    - ``waiting`` preserves arrival order except for ``front=True``
+      re-queues (preemption victims and admission-capacity deferrals keep
+      their seniority).
+    - ``plan_tick`` only *reads* scheduler state: planning a tick and
+      then not executing it (or executing it partially under pool
+      pressure) leaves nothing to roll back here — ``task.pos`` advances
+      only when the engine reports the chunk ran.
     """
 
     def __init__(self, chunk_size: int, token_budget: int):
@@ -123,6 +139,9 @@ class ChunkedScheduler:
 
     # -- queue / task lifecycle -------------------------------------------
     def submit(self, req, front: bool = False):
+        """Queue a request for admission. ``front=True`` restores
+        seniority (preempted / capacity-deferred requests re-enter at the
+        head so they cannot be starved by a steady arrival stream)."""
         if front:
             self.waiting.insert(0, req)
         else:
@@ -130,6 +149,9 @@ class ChunkedScheduler:
 
     @property
     def pending(self) -> int:
+        """Requests this scheduler still owes work: waiting + mid-prefill.
+        (Decoding slots are the engine's; the engine's own ``pending``
+        adds them.)"""
         return len(self.waiting) + len(self.tasks)
 
     def start_task(self, task: PrefillTask) -> PrefillTask:

@@ -1,0 +1,252 @@
+"""Async serving front-end: cancellation frees slots + pool pages
+(mid-prefill and mid-decode), bounded admission rejects instead of
+deadlocking, streamed tokens match the synchronous engine, and the fleet
+trace generator replays deterministically per seed."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.workload import fleet_trace
+from repro.serving import AsyncFrontend, Backpressure, Request, ServingEngine
+from conftest import reduced_params, opts  # noqa: F401  (fixture)
+
+ARCH = "smollm-135m"
+
+
+def _engine(cfg, opts, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", 64)
+    return ServingEngine(cfg, opts, params, eos=-999, fused=True,
+                         tick_tokens=4, **kw)
+
+
+def _paged_chunked(cfg, opts, params, **kw):
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("chunked_prefill", True)
+    kw.setdefault("chunk_size", 16)
+    kw.setdefault("token_budget", 16)
+    return _engine(cfg, opts, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# engine-level cancellation (ServingEngine.cancel)
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_prefill_frees_slot_and_pages(opts):
+    """Cancelling a request whose prefill is mid-chunk drops the task and
+    returns the pool to baseline; the engine keeps serving afterwards."""
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(0)
+    eng = _paged_chunked(cfg, opts, params)
+    eng.submit(Request(uid=0,
+                       prompt=rng.integers(0, cfg.vocab_size, 48,
+                                           dtype=np.int32),
+                       max_tokens=8))
+    eng.step_fused()        # one tick = one 16-token chunk of the 48
+    assert eng.scheduler.tasks, "prefill should still be in flight"
+    assert eng.pool.pages_in_use > 0
+    assert eng.cancel(0) is True
+    assert not eng.scheduler.tasks
+    assert eng.pool.pages_in_use == 0, \
+        "mid-prefill cancel must free every non-cached pool page"
+    assert eng.pending == 0
+    # engine is still healthy: a fresh request completes normally
+    eng.submit(Request(uid=1,
+                       prompt=rng.integers(0, cfg.vocab_size, 12,
+                                           dtype=np.int32),
+                       max_tokens=5))
+    done = eng.run(max_ticks=500)
+    assert [r.uid for r in done] == [1]
+    assert len(done[0].out_tokens) == 5
+
+
+def test_cancel_mid_decode_frees_slot_and_pages(opts):
+    """Cancelling a decoding slot frees its pages within one tick."""
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(1)
+    eng = _paged_chunked(cfg, opts, params)
+    eng.submit(Request(uid=0,
+                       prompt=rng.integers(0, cfg.vocab_size, 16,
+                                           dtype=np.int32),
+                       max_tokens=40))
+    for _ in range(10):
+        eng.step_fused()
+        if not eng.scheduler.tasks and eng.pending:
+            break
+    assert eng.pending == 1 and not eng.scheduler.tasks, "should be decoding"
+    assert eng.cancel(0) is True
+    assert eng.pool.pages_in_use == 0
+    assert eng.pending == 0
+
+
+def test_cancel_queued_and_unknown_uid(opts):
+    """A still-queued request cancels without touching the pool; an
+    unknown uid reports False."""
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(2)
+    eng = _paged_chunked(cfg, opts, params)
+    for uid in range(2):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size, 8,
+                                               dtype=np.int32),
+                           max_tokens=4))
+    assert eng.cancel(1) is True            # never admitted
+    assert eng.cancel(99) is False
+    done = eng.run(max_ticks=500)
+    assert [r.uid for r in done] == [0]
+
+
+# ---------------------------------------------------------------------------
+# front-end: streaming, cancellation, backpressure
+# ---------------------------------------------------------------------------
+
+def test_frontend_streams_bit_equal_to_sync_engine(opts):
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, cfg.vocab_size, l, dtype=np.int32), m)
+            for l, m in [(11, 5), (23, 4), (7, 6)]]
+    eng = _engine(cfg, opts, params)
+    for i, (p, m) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=p.copy(), max_tokens=m))
+    base = {r.uid: r.out_tokens for r in eng.run(max_ticks=500)}
+
+    async def go():
+        async with AsyncFrontend([_engine(cfg, opts, params)],
+                                 offload_ticks=False) as fe:
+            streams = [await fe.submit(p, m) for p, m in reqs]
+            return [await s.tokens() for s in streams]
+
+    outs = asyncio.run(go())
+    assert outs == [base[i] for i in range(len(reqs))]
+
+
+def test_frontend_cancel_mid_decode_returns_pool_to_baseline(opts):
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(4)
+
+    async def go():
+        eng = _paged_chunked(cfg, opts, params)
+        async with AsyncFrontend([eng], offload_ticks=False) as fe:
+            stream = await fe.submit(
+                rng.integers(0, cfg.vocab_size, 16, dtype=np.int32), 40)
+            got = []
+            async for tok in stream:
+                got.append(tok)
+                if len(got) == 3:
+                    stream.cancel()
+            await fe.drain()
+            return eng, stream, got
+
+    eng, stream, got = asyncio.run(go())
+    assert stream.cancelled is True
+    assert 3 <= len(got) < 40, "stream should be truncated by the cancel"
+    assert eng.pool.pages_in_use == 0
+    assert eng.pending == 0
+
+
+def test_frontend_cancel_before_engine_submission(opts):
+    """Cancelling a stream that is still staged never reaches the engine."""
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(5)
+
+    async def go():
+        eng = _paged_chunked(cfg, opts, params)
+        async with AsyncFrontend([eng], offload_ticks=False) as fe:
+            stream = await fe.submit(
+                rng.integers(0, cfg.vocab_size, 16, dtype=np.int32), 8)
+            stream.cancel()     # driver has not drained the staging deque
+            toks = await stream.tokens()
+            await fe.drain()
+            return eng, stream, toks, fe
+
+    eng, stream, toks, fe = asyncio.run(go())
+    assert stream.cancelled is True and toks == []
+    assert fe.stats.cancelled == 1 and fe.stats.completed == 0
+    assert eng.stats.ticks == 0 or eng.pool.pages_in_use == 0
+
+
+def test_frontend_over_limit_rejects_without_deadlock(opts):
+    """Submissions past queue_limit raise Backpressure (with a positive
+    retry estimate); every accepted request still completes in full."""
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(6)
+    limit = 2
+
+    async def go():
+        async with AsyncFrontend([_paged_chunked(cfg, opts, params)],
+                                 queue_limit=limit,
+                                 offload_ticks=False) as fe:
+            accepted, errors = [], []
+            for _ in range(limit + 4):
+                try:
+                    accepted.append(await fe.submit(
+                        rng.integers(0, cfg.vocab_size, 12, dtype=np.int32),
+                        6))
+                except Backpressure as exc:
+                    errors.append(exc)
+            outs = [await asyncio.wait_for(s.tokens(), timeout=60)
+                    for s in accepted]
+            await fe.drain()
+            return accepted, errors, outs, fe
+
+    accepted, errors, outs, fe = asyncio.run(go())
+    assert len(accepted) == limit
+    assert len(errors) == 4 and fe.stats.rejected == 4
+    assert all(e.retry_after_s > 0 for e in errors)
+    assert all(len(o) == 6 for o in outs), "accepted requests must finish"
+
+
+# ---------------------------------------------------------------------------
+# fleet trace generator
+# ---------------------------------------------------------------------------
+
+def test_fleet_trace_seeded_replay_deterministic():
+    kw = dict(n_robots=5, steps_per_robot=4, control_hz=10.0,
+              arrival_rate=3.0, ctx_median=24, ctx_sigma=0.5, ctx_max=48,
+              tail=4, action_tokens=8, vocab_size=500)
+    a = fleet_trace(seed=7, **kw)
+    b = fleet_trace(seed=7, **kw)
+    assert len(a) == len(b) == 20
+    for x, y in zip(a, b):
+        assert (x.t, x.robot, x.step, x.kind, x.max_tokens,
+                x.deadline_s) == (y.t, y.robot, y.step, y.kind,
+                                  y.max_tokens, y.deadline_s)
+        assert np.array_equal(x.prompt, y.prompt)
+    c = fleet_trace(seed=8, **kw)
+    assert any(not np.array_equal(x.prompt, z.prompt)
+               for x, z in zip(a, c)), "different seed, same trace?"
+
+
+def test_fleet_trace_structure():
+    """Arrival order, per-robot prefix sharing, periods, and deadlines."""
+    hz, tail = 10.0, 4
+    trace = fleet_trace(n_robots=4, steps_per_robot=3, control_hz=hz,
+                        ctx_median=24, ctx_max=48, tail=tail, seed=0)
+    assert [(-e.t, e.robot, e.step) for e in trace] == sorted(
+        [(-e.t, e.robot, e.step) for e in trace], reverse=True)
+    by_robot = {}
+    for e in trace:
+        by_robot.setdefault(e.robot, []).append(e)
+    for events in by_robot.values():
+        events.sort(key=lambda e: e.step)
+        assert events[0].kind == "episode"
+        assert events[0].deadline_s == pytest.approx(10 / hz)
+        ctx = events[0].prompt[:-tail]
+        assert len(ctx) >= tail + 1
+        for e in events[1:]:
+            assert e.kind == "control"
+            assert e.deadline_s == pytest.approx(1 / hz)
+            # repeats share the robot's full context prefix, fresh tail
+            assert np.array_equal(e.prompt[:-tail], ctx)
+            assert e.t == pytest.approx(events[0].t + e.step / hz)
+
+
+def test_fleet_trace_validates_args():
+    with pytest.raises(ValueError):
+        fleet_trace(n_robots=0)
+    with pytest.raises(ValueError):
+        fleet_trace(control_hz=0.0)
+    with pytest.raises(ValueError):
+        fleet_trace(arrival_rate=-1.0)

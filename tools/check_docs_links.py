@@ -7,10 +7,12 @@ Two checks, both exiting non-zero with a listing on failure:
    resolve to an existing file (anchors are stripped; external URLs and
    badge/workflow links are skipped).
 2. **Gate table.** The module keys in docs/benchmarks.md's gate table
-   (the `| `key`` | ... |` rows) must exactly match the ``MODULES``
-   registry in benchmarks/run.py — a module added without a docs row (or a
-   docs row for a renamed/removed module) fails. Parsed from source so the
-   check needs no jax import.
+   (the `| `key`` | ... |` rows of the "## Modules" section — other
+   tables, e.g. the BENCH_*.json field schema, are not module
+   registries) must exactly match the ``MODULES`` registry in
+   benchmarks/run.py — a module added without a docs row (or a docs row
+   for a renamed/removed module) fails. Parsed from source so the check
+   needs no jax import.
 
     python tools/check_docs_links.py [repo_root]
 """
@@ -44,7 +46,15 @@ def check_gate_table(root: pathlib.Path):
     if not docs.exists() or not runner.exists():
         missing = docs if not docs.exists() else runner
         return [(missing, "<file missing>")], 0
-    table = set(TABLE_KEY.findall(docs.read_text()))
+    text = docs.read_text()
+    # scope to the "## Modules" section: later tables (BENCH field
+    # schemas, per-gate detail tables) are not module registries
+    start = text.find("## Modules")
+    section = text[start:] if start >= 0 else text
+    nxt = section.find("\n## ", 1)
+    if nxt > 0:
+        section = section[:nxt]
+    table = set(TABLE_KEY.findall(section))
     src = runner.read_text()
     block = src[src.index("MODULES = {"):src.index("}", src.index("MODULES"))]
     modules = set(MODULE_KEY.findall(block))
