@@ -27,6 +27,14 @@ paged-KV subsystem — see docs/benchmarks.md for how to read the output):
 
 Reported rows: tokens/s per layout/dtype, per-request cache bytes, pool
 high-water marks, quantized byte ratios and max logit errors.
+
+Also reported (not gated): a **scale-granularity study** — the stored
+prefix KV fake-quantized at per-page, per-(page, head) (the pool's shipped
+format) and per-(page, head, token) scale granularity, teacher-forced
+against the unquantized rollout. The rows quantify the accuracy/overhead
+trade the per-(page, head) choice sits on: finer scales cost f32 sidecar
+elements per page, coarser scales couple every head's range to the page's
+loudest head.
 """
 from __future__ import annotations
 
@@ -109,6 +117,59 @@ def _logit_rollout(cfg, opts, params, prompt, n_steps, kv_dtype,
         tok = jnp.asarray([[nxt if force_tokens is None
                             else force_tokens[i]]], jnp.int32)
     return jnp.stack(out), greedy
+
+
+def _fake_quant_cache(caches, dtype, reduce_axes):
+    """Round-trip every dense KV cache leaf through ``dtype`` codes with
+    amax scales at a chosen granularity. Leaves are ``[..., S, K, h]``
+    (token, kv-head, head-dim trailing); the token axis is reshaped to
+    ``(num_pages, PAGE_SIZE)`` so ``reduce_axes`` — relative to the
+    reshaped ``[..., np, ps, K, h]`` — selects the scale granularity:
+    ``(-3, -2, -1)`` per-page, ``(-3, -1)`` per-(page, head) (the pool's
+    format), ``(-1,)`` per-(page, head, token)."""
+    def leaf(x):
+        if not jnp.issubdtype(x.dtype, jnp.floating) or x.ndim < 3:
+            return x
+        S = x.shape[-3]
+        y = x.reshape(x.shape[:-3] + (S // PAGE_SIZE, PAGE_SIZE)
+                      + x.shape[-2:])
+        a = jnp.max(jnp.abs(y.astype(jnp.float32)), axis=reduce_axes,
+                    keepdims=True)
+        scale = a / kv_quant.qmax(kv_quant.quant_dtype(dtype))
+        y = kv_quant.decode(
+            kv_quant.encode(y, scale, kv_quant.quant_dtype(dtype)), scale)
+        return y.reshape(x.shape).astype(x.dtype)
+
+    return jax.tree_util.tree_map(leaf, caches)
+
+
+def _dense_rollout(cfg, opts, params, prompt, n_steps, quant=None,
+                   force_tokens=None):
+    """Prefill + teacher-forced decode on the dense cache layout; ``quant``
+    fake-quantizes the prefill cache before decoding, so the logit delta vs
+    the unquantized rollout isolates stored-prefix quantization error at the
+    chosen granularity (decode-written rows stay full precision)."""
+    logits, caches = M.prefill(cfg, opts, params, {"tokens": prompt[None]},
+                               MAX_SEQ, cache_dtype=jnp.float32)
+    if quant is not None:
+        caches = quant(caches)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out, greedy = [], []
+    for i in range(n_steps):
+        idx = jnp.asarray([len(prompt) + i], jnp.int32)
+        logits, caches = M.decode_step(cfg, opts, params, tok, caches, idx)
+        out.append(logits[0, -1])
+        nxt = int(jnp.argmax(logits[0, -1]))
+        greedy.append(nxt)
+        tok = jnp.asarray([[nxt if force_tokens is None
+                            else force_tokens[i]]], jnp.int32)
+    return jnp.stack(out), greedy
+
+
+# (reduce_axes over [..., np, ps, K, h], f32 scale elements per page-head)
+GRANULARITIES = (("per_page", (-3, -2, -1)),
+                 ("per_page_head", (-3, -1)),
+                 ("per_page_head_token", (-1,)))
 
 
 def run(emit):
@@ -226,3 +287,23 @@ def run(emit):
              f"greedy_agree={agree}/{len(ref_greedy)}")
         assert err <= tol, \
             f"{kv_dtype} decode logits drifted {err:.4f} from bf16 (> {tol})"
+
+    # -- scale-granularity study (reported, not gated) ---------------------
+    # same teacher-forced protocol as gate 6 but on the dense layout with
+    # the prefix KV fake-quantized at three scale granularities; sidecar =
+    # f32 scale elements per (page, layer, K/V) — the storage the finer
+    # granularity buys its accuracy with (page rows are ps*h elements)
+    g_logits, g_greedy = _dense_rollout(cfg, opts, params, prompt, 8)
+    n_kv = cfg.num_kv_heads
+    sidecar = {"per_page": 1, "per_page_head": n_kv,
+               "per_page_head_token": PAGE_SIZE * n_kv}
+    for kv_dtype in ("int8", "fp8"):
+        for gran, axes in GRANULARITIES:
+            q = lambda c: _fake_quant_cache(c, kv_dtype, axes)
+            ql, qg = _dense_rollout(cfg, opts, params, prompt, 8, quant=q,
+                                    force_tokens=g_greedy)
+            err = float(jnp.max(jnp.abs(ql - g_logits)))
+            agree = sum(a == b for a, b in zip(g_greedy, qg))
+            emit(f"kv_cache/granularity/{kv_dtype}/{gran}", err,
+                 f"greedy_agree={agree}/{len(g_greedy)};"
+                 f"scale_elems_per_page={sidecar[gran]}")

@@ -46,6 +46,17 @@ def main(argv=None):
     p.add_argument("--prefill-band", type=int, default=32,
                    help="key-block size of the banded prefill attention "
                         "core (prefill key work ~ live prefix, not max_seq)")
+    p.add_argument("--spec-decode", action="store_true",
+                   help="self-speculative decode: draft K tokens with a "
+                        "truncated/quantized pass of the same model, verify "
+                        "them in one banded chunk (greedy only)")
+    p.add_argument("--spec-k", type=int, default=4,
+                   help="speculation depth (needs --spec-decode)")
+    p.add_argument("--draft-layers", type=int, default=0,
+                   help="draft decoder layers (0 = half the stack)")
+    p.add_argument("--draft-quant", default="none",
+                   choices=["none", "int8", "fp8"],
+                   help="fake-quantize the draft pass's weights")
     args = p.parse_args(argv)
 
     cfg = get_config("qwen1.5-0.5b").reduced()
@@ -60,7 +71,11 @@ def main(argv=None):
                         kv_dtype=args.kv_dtype,
                         chunked_prefill=args.chunked_prefill,
                         chunk_size=args.chunk_size,
-                        token_budget=args.token_budget)
+                        token_budget=args.token_budget,
+                        spec_decode=args.spec_decode, spec_k=args.spec_k,
+                        draft_layers=args.draft_layers or None,
+                        draft_quant=(None if args.draft_quant == "none"
+                                     else args.draft_quant))
 
     rng = np.random.default_rng(0)
     shared_prompt = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
@@ -103,6 +118,13 @@ def main(argv=None):
               f"decode tick p50/p99 "
               f"{ph.get('decode_tick_p50', 0.0) * 1e3:.1f}/"
               f"{ph.get('decode_tick_p99', 0.0) * 1e3:.1f} ms")
+    if args.spec_decode:
+        print(f"speculative decode (K {args.spec_k}, draft "
+              f"{eng.draft_blocks} blocks, quant {args.draft_quant}): "
+              f"{ph.get('spec_accept_per_pass', 0.0):.2f} tokens per "
+              f"full-model pass | accept hist "
+              f"{ph.get('spec_accept_hist', [])} | draft cost "
+              f"{ph.get('spec_draft_frac', 0.0):.2f} of total passes")
     print("per-request phases (queue+prefill | decode):")
     for r in sorted(done, key=lambda r: r.uid)[:6]:
         print(f"  req {r.uid:2d}: {r.t_prefill - r.t_submit:6.3f}s | "

@@ -65,8 +65,9 @@ def _chunk_prefill_body(index, ik, q_ref, k_ref, v_ref, o_ref,
     are masked before they can contribute, and V is zeroed on lanes dead
     for every row so NaN-padded OOB tails cannot poison the accumulator.
 
-    ``k_scale``/``v_scale`` (optional f32 scalars) dequantize an int8/fp8
-    KV block inside the VMEM tile (quantized paged pools)."""
+    ``k_scale``/``v_scale`` (optional f32 — a scalar per-(page, head)
+    scale, or a [bk, 1] per-token column) dequantize an int8/fp8 KV block
+    inside the VMEM tile (quantized paged pools)."""
     S = q_ref.shape[1]
 
     @pl.when(ik == 0)

@@ -15,9 +15,10 @@ reserved null page 0 so their DMA is never issued, and their compute is
 skipped by ``pl.when``.
 
 Quantized pools (``k_scales``/``v_scales`` given) stream 1-byte codes plus
-one ``[num_pages, K]`` f32 scale array per pool, gathered through the same
-page-table index map and dequantized inside the VMEM tile, as in the paged
-decode kernel.
+one f32 scale array per pool — ``[num_pages, K]`` per-(page, head) or
+``[num_pages, page_size, K]`` per-token, dispatched on ndim — gathered
+through the same page-table index map and dequantized inside the VMEM
+tile, as in the paged decode kernel.
 
 Partition caveat: this kernel blocks the key axis per *page* (one grid cell
 per page — a BlockSpec gather cannot span non-contiguous pages), while the
@@ -57,6 +58,18 @@ def _paged_quant_kernel(pt_ref, idx_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
                         k_scale=ks_ref[0, 0], v_scale=vs_ref[0, 0])
 
 
+def _paged_quant_tok_kernel(pt_ref, idx_ref, q_ref, k_ref, v_ref, ks_ref,
+                            vs_ref, o_ref, m_scr, l_scr, acc_scr, *, ps: int,
+                            npg: int, window: int):
+    # per-token scales: one f32 per row of the page, broadcast over h as a
+    # [ps, 1] column against the [ps, h] KV tile
+    _chunk_prefill_body(idx_ref[pl.program_id(0)], pl.program_id(2),
+                        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                        bk=ps, nk=npg, window=window,
+                        k_scale=ks_ref[0, :, 0][:, None],
+                        v_scale=vs_ref[0, :, 0][:, None])
+
+
 def paged_chunk_prefill_attention_kernel(q, k_pages, v_pages, page_table,
                                          index, *, k_scales=None,
                                          v_scales=None,
@@ -64,8 +77,10 @@ def paged_chunk_prefill_attention_kernel(q, k_pages, v_pages, page_table,
                                          interpret: bool = False):
     """q [B,S,N,h] (one prefill chunk, already scattered into the pool);
     k/v pages [num_pages, page_size, K, h] (bf16/f32, or int8/fp8 codes
-    when ``k_scales``/``v_scales`` [num_pages, K] f32 are given — pass both
-    or neither); page_table [B, npg] int32 physical page ids (the caller
+    when ``k_scales``/``v_scales`` f32 — ``[num_pages, K]`` per-(page,
+    head) or ``[num_pages, page_size, K]`` per-token, dispatched on ndim —
+    are given; pass both or neither); page_table [B, npg] int32 physical
+    page ids (the caller
     may pre-slice npg to the banded live bound); index int32 scalar or
     per-slot [B] vector of chunk start positions. Returns [B,S,N,h]."""
     if (k_scales is None) != (v_scales is None):
@@ -89,6 +104,11 @@ def paged_chunk_prefill_attention_kernel(q, k_pages, v_pages, page_table,
         live = _chunk_block_live(idx_ref[b], S, ip * ps, ps, window)
         return jnp.where(live, pt_ref[b, ip], 0), n // G
 
+    def scale_map_tok(b, n, ip, pt_ref, idx_ref):
+        # per-token scale block: the page's [ps] scale column for this head
+        live = _chunk_block_live(idx_ref[b], S, ip * ps, ps, window)
+        return jnp.where(live, pt_ref[b, ip], 0), 0, n // G
+
     q_spec = pl.BlockSpec((1, S, 1, h),
                           lambda b, n, ip, pt_ref, idx_ref: (b, 0, n, 0))
     in_specs = [q_spec,
@@ -98,6 +118,13 @@ def paged_chunk_prefill_attention_kernel(q, k_pages, v_pages, page_table,
     if k_scales is None:
         kernel = functools.partial(_paged_kernel, ps=ps, npg=npg,
                                    window=window)
+    elif k_scales.ndim == 3:
+        kernel = functools.partial(_paged_quant_tok_kernel, ps=ps, npg=npg,
+                                   window=window)
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map_tok),
+                     pl.BlockSpec((1, ps, 1), scale_map_tok)]
+        operands += [jnp.asarray(k_scales, jnp.float32),
+                     jnp.asarray(v_scales, jnp.float32)]
     else:
         kernel = functools.partial(_paged_quant_kernel, ps=ps, npg=npg,
                                    window=window)

@@ -53,10 +53,12 @@ def _flash_decode_body(index, ik, q_ref, k_ref, v_ref, o_ref,
     ``index`` (including any out-of-bounds tail lanes of a non-aligned
     cache) are masked before they can contribute.
 
-    ``k_scale``/``v_scale`` (optional f32 scalars) dequantize an int8/fp8 KV
-    block inside the VMEM tile: the block's codes are multiplied by the
-    per-(page, head) scale right after the fp32 upcast, so HBM only ever
-    streams 1-byte codes and the online softmax still runs in fp32."""
+    ``k_scale``/``v_scale`` (optional f32 — a scalar per-(page, head)
+    scale, or a [bk, 1] per-token column that broadcasts over the head
+    dim) dequantize an int8/fp8 KV block inside the VMEM tile: the block's
+    codes are multiplied by the scale right after the fp32 upcast, so HBM
+    only ever streams 1-byte codes and the online softmax still runs in
+    fp32."""
     @pl.when(ik == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)

@@ -16,11 +16,14 @@ never issued, and their compute is skipped by ``pl.when`` — vLLM's paged
 attention early-exit, re-expressed for the TPU's sequential grid.
 
 Quantized pools (``k_scales``/``v_scales`` given) stream 1-byte codes plus
-one ``[num_pages, K]`` f32 scale array per pool, gathered through the same
-page-table index map (one (1, 1) scale block per grid cell, remapped in
-lockstep with its value page). Dequantization — ``code * scale`` — happens
-inside the VMEM tile right after the fp32 upcast, so HBM traffic per token
-drops to ~1 byte per cache element while the online softmax stays fp32.
+one f32 scale array per pool — ``[num_pages, K]`` (per-(page, head)
+granularity: a (1, 1) scale block per grid cell) or
+``[num_pages, page_size, K]`` (per-token granularity: a (1, page_size, 1)
+block whose per-row column broadcasts over the head dim) — gathered
+through the same page-table index map, remapped in lockstep with the value
+page. Dequantization — ``code * scale`` — happens inside the VMEM tile
+right after the fp32 upcast, so HBM traffic per token drops to ~1 byte per
+cache element while the online softmax stays fp32.
 
 Page 0 is the pool's reserved null page: padding entries in the table point
 at it and its contribution is always masked.
@@ -55,15 +58,28 @@ def _paged_quant_kernel(pt_ref, idx_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
                        k_scale=ks_ref[0, 0], v_scale=vs_ref[0, 0])
 
 
+def _paged_quant_tok_kernel(pt_ref, idx_ref, q_ref, k_ref, v_ref, ks_ref,
+                            vs_ref, o_ref, m_scr, l_scr, acc_scr, *, ps: int,
+                            npg: int, window: int):
+    # per-token scales: one f32 per row of the page, broadcast over h as a
+    # [ps, 1] column against the [ps, h] KV tile
+    _flash_decode_body(idx_ref[pl.program_id(0)], pl.program_id(2),
+                       q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                       bk=ps, nk=npg, window=window,
+                       k_scale=ks_ref[0, :, 0][:, None],
+                       v_scale=vs_ref[0, :, 0][:, None])
+
+
 def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, index, *,
                                   k_scales=None, v_scales=None,
                                   window: int = GLOBAL_WINDOW,
                                   interpret: bool = False):
     """q [B,N,h]; k/v pages [num_pages, page_size, K, h] (bf16/f32, or
-    int8/fp8 codes when ``k_scales``/``v_scales`` [num_pages, K] f32 are
-    given — pass both or neither); page_table [B, npg] int32 physical page
-    ids; index int32 scalar or per-slot [B] vector of current positions
-    (< npg * page_size). Returns [B,N,h] in q's dtype."""
+    int8/fp8 codes when ``k_scales``/``v_scales`` f32 — ``[num_pages, K]``
+    per-(page, head) or ``[num_pages, page_size, K]`` per-token, dispatched
+    on ndim — are given; pass both or neither); page_table [B, npg] int32
+    physical page ids; index int32 scalar or per-slot [B] vector of current
+    positions (< npg * page_size). Returns [B,N,h] in q's dtype."""
     if (k_scales is None) != (v_scales is None):
         raise ValueError("pass both k_scales and v_scales, or neither")
     B, N, h = q.shape
@@ -89,6 +105,11 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, index, *,
         live = _block_live(idx_ref[b], ip * ps, ps, window)
         return jnp.where(live, pt_ref[b, ip], 0), kh
 
+    def scale_map_tok(b, kh, ip, pt_ref, idx_ref):
+        # per-token scale block: the page's [ps] scale column for this head
+        live = _block_live(idx_ref[b], ip * ps, ps, window)
+        return jnp.where(live, pt_ref[b, ip], 0), 0, kh
+
     q_spec = pl.BlockSpec((1, G, 1, h),
                           lambda b, kh, ip, pt_ref, idx_ref: (b, 0, kh, 0))
     in_specs = [q_spec,
@@ -98,6 +119,13 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, index, *,
     if k_scales is None:
         kernel = functools.partial(_paged_kernel, ps=ps, npg=npg,
                                    window=window)
+    elif k_scales.ndim == 3:
+        kernel = functools.partial(_paged_quant_tok_kernel, ps=ps, npg=npg,
+                                   window=window)
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map_tok),
+                     pl.BlockSpec((1, ps, 1), scale_map_tok)]
+        operands += [jnp.asarray(k_scales, jnp.float32),
+                     jnp.asarray(v_scales, jnp.float32)]
     else:
         kernel = functools.partial(_paged_quant_kernel, ps=ps, npg=npg,
                                    window=window)

@@ -39,11 +39,16 @@ def gather_pages(pages, page_table):
 
 
 def gather_scales(scales, page_table, page_size: int):
-    """Materialize dense per-position scales from per-page scales.
-    scales [num_pages, K]; page_table [B, npg] -> [B, npg*page_size, K, 1]
-    (every position of logical page p carries that page's scale), the factor
-    that dequantizes the matching ``gather_pages`` output."""
-    g = scales[page_table]                       # [B, npg, K]
+    """Materialize dense per-position scales from pool scales.
+    scales [num_pages, K] (per-(page, head)) or [num_pages, page_size, K]
+    (per-token); page_table [B, npg] -> [B, npg*page_size, K, 1], the factor
+    that dequantizes the matching ``gather_pages`` output (under "head"
+    granularity every position of logical page p carries that page's
+    scale; under "token" each position carries its own)."""
+    g = scales[page_table]               # [B,npg,K] or [B,npg,ps,K]
+    if scales.ndim == 3:
+        B, npg = page_table.shape
+        return g.reshape(B, npg * page_size, scales.shape[-1])[..., None]
     return jnp.repeat(g, page_size, axis=1)[..., None]
 
 
@@ -79,8 +84,9 @@ def paged_decode_attention_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
     their per-page-per-head scales through the page table, dequantize to
     fp32 (code * scale — the exact arithmetic the kernel does inside its
     VMEM tile), then run the dense oracle. q [B,N,h]; pages
-    [num_pages, page_size, K, h] int8/fp8; scales [num_pages, K] f32;
-    page_table [B, npg]; index scalar or [B]."""
+    [num_pages, page_size, K, h] int8/fp8; scales [num_pages, K] or
+    [num_pages, page_size, K] f32; page_table [B, npg]; index scalar or
+    [B]."""
     ps = k_pages.shape[1]
     kd = gather_pages(k_pages, page_table).astype(jnp.float32) \
         * gather_scales(k_scales, page_table, ps)

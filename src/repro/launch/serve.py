@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import json
 import time
 
 import jax
@@ -30,6 +31,30 @@ from repro.core.workload import fleet_trace
 from repro.models import model as M
 from repro.models.layers import ModelOptions
 from repro.serving import AsyncFrontend, Backpressure, Request, ServingEngine
+
+
+def _engine_snapshot(eng):
+    """Flat float dict for a single bare engine (no front-end): the phase
+    report plus the headline counters, list-valued entries expanded to
+    indexed keys so the payload stays scrape-flat."""
+    snap = {"tokens_decoded": float(eng.stats.tokens_decoded),
+            "prefill_tokens": float(eng.stats.prefill_tokens),
+            "device_steps": float(eng.stats.device_steps),
+            "pages_hwm": float(eng.stats.pages_hwm)}
+    for k, v in eng.stats.phase_report().items():
+        if isinstance(v, (list, tuple)):
+            for j, x in enumerate(v):
+                snap[f"{k}_{j}"] = float(x)
+        else:
+            snap[k] = float(v)
+    return snap
+
+
+def _dump_stats(path: str, snap):
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[serve] stats snapshot -> {path} ({len(snap)} keys)")
 
 
 def main(argv=None):
@@ -74,6 +99,27 @@ def main(argv=None):
     p.add_argument("--token-budget", type=int, default=64,
                    help="tokens one tick may spend across decode steps and "
                         "prefill chunks")
+    p.add_argument("--spec-decode", action="store_true",
+                   help="self-speculative decode: a cheap draft pass of the "
+                        "same model proposes spec-k tokens per slot and one "
+                        "banded verify chunk checks them all in a single "
+                        "full-model pass (greedy only; see "
+                        "docs/speculative.md)")
+    p.add_argument("--spec-k", type=int, default=4,
+                   help="speculation depth: tokens per draft+verify round "
+                        "(requires --spec-decode)")
+    p.add_argument("--draft-layers", type=int, default=0,
+                   help="decoder layers the draft pass runs (0 = half the "
+                        "stack; requires --spec-decode)")
+    p.add_argument("--draft-quant", default="none",
+                   choices=["none", "int8", "fp8"],
+                   help="fake-quantize the draft pass's weights to this "
+                        "dtype — models a 1-byte-weight draft stream "
+                        "(requires --spec-decode)")
+    p.add_argument("--stats-json", default="",
+                   help="write a flat JSON stats snapshot here on exit "
+                        "(frontend mode: AsyncFrontend.stats_snapshot(); "
+                        "engine mode: the engine's phase report)")
     p.add_argument("--prefill-band", type=int, default=32,
                    help="key-block size of the banded prefill-with-cache "
                         "attention core: prefill key-axis work covers the "
@@ -131,7 +177,12 @@ def main(argv=None):
                              kv_dtype=args.kv_dtype,
                              chunked_prefill=args.chunked_prefill,
                              chunk_size=args.chunk_size,
-                             token_budget=args.token_budget)
+                             token_budget=args.token_budget,
+                             spec_decode=args.spec_decode,
+                             spec_k=args.spec_k,
+                             draft_layers=args.draft_layers or None,
+                             draft_quant=(None if args.draft_quant == "none"
+                                          else args.draft_quant))
 
     if args.frontend:
         return asyncio.run(_main_frontend(args, cfg, make_engine))
@@ -171,6 +222,15 @@ def main(argv=None):
               f"pages_hwm={st.pages_hwm} "
               f"cache_bytes_hwm={st.cache_bytes_hwm} "
               f"prefix_hits={st.prefix_hits}")
+    if args.spec_decode:
+        print(f"[serve] speculative: K={args.spec_k} "
+              f"draft_quant={args.draft_quant} "
+              f"verify_passes={st.spec_verify_passes} "
+              f"accept/pass={ph.get('spec_accept_per_pass', 0.0):.3f} "
+              f"draft_frac={ph.get('spec_draft_frac', 0.0):.3f} "
+              f"hist={ph.get('spec_accept_hist', [])}")
+    if args.stats_json:
+        _dump_stats(args.stats_json, _engine_snapshot(eng))
     for r in done[:4]:
         print(f"  req {r.uid}: queue {r.t_prefill - r.t_submit:.3f}s "
               f"decode {r.t_done - r.t_prefill:.3f}s "
@@ -243,6 +303,8 @@ async def _main_frontend(args, cfg, make_engine):
         print(f"  replica {i}: decode_tokens={st.tokens_decoded} "
               f"prefill_tokens={st.prefill_tokens} "
               f"skipped={st.prefill_skipped} prefix_hits={st.prefix_hits}")
+    if args.stats_json:
+        _dump_stats(args.stats_json, fe.stats_snapshot())
     return streams
 
 

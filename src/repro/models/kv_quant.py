@@ -13,15 +13,26 @@ Format
   paged-vs-dense bit-equality oracle holds), ``"int8"`` (symmetric, codes in
   [-127, 127]) or ``"fp8"`` (``float8_e4m3fn``, max 448).
 - Every quantized K/V pool leaf ``[num_pages, page_size, K, h]`` gets a
-  sibling scale leaf ``[num_pages, K]`` float32 (per-page, per-KV-head):
-  one scale covers all ``page_size * h`` elements a (page, head) pair holds.
-  A stored code ``c`` represents the value ``c * scale[page, head]``.
+  sibling float32 scale leaf whose shape is set by the pool's **scale
+  granularity**: ``"head"`` stores ``[num_pages, K]`` (per-page,
+  per-KV-head — one scale covers all ``page_size * h`` elements a
+  (page, head) pair holds) and ``"token"`` stores
+  ``[num_pages, page_size, K]`` (per-row: one scale per (page, token
+  offset, head), covering ``h`` elements). A stored code ``c`` represents
+  ``c * scale[...]`` under its covering scale.
 - Scales are **amax-derived**: ``scale = max(|x|) / qmax`` over the covered
-  elements. On prefill scatter the amax spans the whole page; on decode the
-  scale grows monotonically — writing a token whose amax exceeds the page's
-  current range requantizes the already-stored codes under the new scale
+  elements. Under ``"head"`` granularity the scale grows monotonically on
+  decode writes — a token whose amax exceeds the page's current range
+  requantizes the already-stored codes under the new scale
   (``decode -> insert -> encode``, drift-free while the scale is unchanged
-  because ``encode(decode(c)) == c`` exactly at a fixed scale).
+  because ``encode(decode(c)) == c`` exactly at a fixed scale). Under
+  ``"token"`` granularity every row quantizes independently and a write
+  simply *replaces* the row's codes and scale — no neighbour is ever
+  requantized, so rewriting a position is exact regardless of write order.
+  That rewrite-stability is what the speculative decode tick requires: its
+  verify chunk re-writes positions that rejected draft rows already
+  touched, and shared ``"head"`` scales would let a rejected row's amax
+  leak into accepted rows on the same page (see docs/speculative.md).
 - All-zero pages carry scale 0; ``encode`` guards the division so they
   produce code 0, and 0-codes dequantize to exactly 0 (unwritten rows of a
   partially-filled page never contribute garbage).
@@ -30,9 +41,11 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 KV_DTYPES = ("bf16", "int8", "fp8")
+SCALE_GRANULARITIES = ("head", "token")
 
 # smallest representable scale guard: avoids 0/0 on all-zero pages while
 # keeping every real amax (>= ~1e-30 is far below KV magnitudes) intact
@@ -67,10 +80,12 @@ def qmax(dtype) -> float:
     raise ValueError(f"not a quantized KV dtype: {dtype}")
 
 
-def amax_scale(rows, dtype):
-    """Per-(page, head) amax scale for page rows ``[..., ps, K, h]`` ->
-    ``[..., K]`` float32 (reduced over the token and head-dim axes)."""
-    a = jnp.max(jnp.abs(rows.astype(jnp.float32)), axis=(-3, -1))
+def amax_scale(rows, dtype, granularity: str = "head"):
+    """Amax scale for page rows ``[..., ps, K, h]``: ``"head"`` reduces the
+    token and head-dim axes -> ``[..., K]``; ``"token"`` reduces only the
+    head-dim axis -> ``[..., ps, K]`` (one scale per row)."""
+    axes = (-3, -1) if granularity == "head" else (-1,)
+    a = jnp.max(jnp.abs(rows.astype(jnp.float32)), axis=axes)
     return a / qmax(dtype)
 
 
@@ -89,9 +104,39 @@ def decode(codes, scale):
     return codes.astype(jnp.float32) * scale
 
 
-def quantize_page_rows(rows, dtype):
+def quantize_page_rows(rows, dtype, granularity: str = "head"):
     """Quantize dense page rows ``[..., ps, K, h]`` in one shot.
-    Returns ``(codes, scales)`` with scales ``[..., K]`` — the layout the
-    pool's sibling scale leaves store and the paged decode kernel reads."""
-    scales = amax_scale(rows, dtype)
-    return encode(rows, scales[..., None, :, None], dtype), scales
+    Returns ``(codes, scales)`` with scales ``[..., K]`` (``"head"``) or
+    ``[..., ps, K]`` (``"token"``) — the layouts the pool's sibling scale
+    leaves store and the paged kernels read."""
+    scales = amax_scale(rows, dtype, granularity)
+    bcast = (scales[..., None, :, None] if granularity == "head"
+             else scales[..., None])
+    return encode(rows, bcast, dtype), scales
+
+
+def fake_quantize_tree(params, kv_dtype: str):
+    """Round-trip a parameter tree through ``kv_dtype`` codes — the
+    self-speculative *weight-quantized draft*: the draft model runs in the
+    original dtype but with weights carrying int8/fp8 precision, standing in
+    for a deployment where the draft pass streams 1-byte weights from HBM.
+
+    Per-output-channel symmetric scales (amax over every axis but the last)
+    keep greedy argmax agreement with the full-precision model high — the
+    property the speculative acceptance rate leans on. Only matrices
+    (``ndim >= 2``) quantize; vectors (norm gains, biases) pass through
+    unchanged, as do integer leaves. Returns a new tree with the original
+    dtypes (fake quantization changes values, never types)."""
+    dtype = quant_dtype(kv_dtype)
+    if dtype is None:
+        return params
+
+    def leaf(x):
+        if x.ndim < 2 or not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        axes = tuple(range(x.ndim - 1))
+        scale = (jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes,
+                         keepdims=True) / qmax(dtype))
+        return decode(encode(x, scale, dtype), scale).astype(x.dtype)
+
+    return jax.tree_util.tree_map(leaf, params)

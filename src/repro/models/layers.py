@@ -287,6 +287,24 @@ def band_len(live: int, band: int, limit: int) -> int:
     return min(-(-live // band) * band, limit)
 
 
+def live_bound(live_len, limit: int) -> int:
+    """Normalize the ``live_len`` argument of the chunk dispatch to a single
+    static key-axis bound. ``None`` means the whole cache view; an int is a
+    batch-wide bound; a tuple/list gives one static bound *per slot* and
+    collapses to its max here — the shared band slice must cover the oldest
+    slot, while the kernels' per-slot ``[B]`` index vectors already make
+    every block past a younger slot's own position an exact no-op for that
+    slot. The tuple form therefore buys the tightest *shared* slice plus
+    per-slot key-lane accounting at the caller; note a jitted caller should
+    pre-collapse to the max (a per-slot tuple as a static jit argument
+    would retrace on every distinct batch age mix)."""
+    if live_len is None:
+        return limit
+    if isinstance(live_len, (tuple, list)):
+        return max(live_len) if live_len else limit
+    return live_len
+
+
 def attention_chunk_banded(q, k_cache, v_cache, index, window: int,
                            band: int):
     """Banded chunk-prefill core (pure jnp; the Pallas twin is
@@ -437,8 +455,10 @@ def update_cache_paged(pages, new, page_table, index, scales=None,
     for unquantized pools).
 
     pages [num_pages, page_size, K, h]; new [B,1,K,h]; page_table [B,npg]
-    int32; index scalar or per-slot [B] vector; scales [num_pages, K]
-    float32 (quantized pools only). ``valid`` (scalar or [B] bool, default
+    int32; index scalar or per-slot [B] vector; scales ``[num_pages, K]``
+    (per-(page, head) granularity) or ``[num_pages, page_size, K]``
+    (per-token granularity) float32 — quantized pools only, dispatched on
+    ``scales.ndim``. ``valid`` (scalar or [B] bool, default
     all-true) additionally routes masked rows to the null-page sink as
     zeros — the chunked-prefill path uses it for the padding rows of a
     partial final chunk. Logical position ``i`` of slot ``b``
@@ -456,7 +476,11 @@ def update_cache_paged(pages, new, page_table, index, scales=None,
     (no slot's scale grew this step) therefore skips the page round-trip
     entirely via ``lax.cond``: it encodes just the token row under the
     existing scale, bit-identical to what the requantizing branch would
-    produce. Retired slots (table row all null page 0) keep the null page's
+    produce. Per-token scales (``scales.ndim == 3``) have no cross-row
+    coupling at all: the write replaces the row's codes *and* its scale,
+    touching nothing else — which makes position re-writes exact (the
+    property the speculative tick's rejected-row rollback relies on).
+    Retired slots (table row all null page 0) keep the null page's
     documented all-zero state: their token codes and scale updates are
     masked to zero, so page 0 always dequantizes to exactly 0."""
     ps = pages.shape[1]
@@ -472,6 +496,13 @@ def update_cache_paged(pages, new, page_table, index, scales=None,
     from repro.models import kv_quant
     tok = new[:, 0].astype(jnp.float32)                       # [B,K,h]
     sink = (pid == 0)                                         # retired slot
+    if scales.ndim == 3:
+        # per-token granularity: independent row write, scale replaced
+        tok = jnp.where(sink[:, None, None], 0.0, tok)
+        row_scale = jnp.max(jnp.abs(tok), -1) / kv_quant.qmax(pages.dtype)
+        codes = kv_quant.encode(tok, row_scale[:, :, None], pages.dtype)
+        return (pages.at[pid, idx % ps].set(codes),
+                scales.at[pid, idx % ps].set(row_scale))
     old_scale = scales[pid]                                   # [B,K]
     tok_scale = jnp.max(jnp.abs(tok), -1) / kv_quant.qmax(pages.dtype)
     new_scale = jnp.where(sink[:, None], old_scale,
@@ -506,24 +537,35 @@ def update_cache_paged_chunk(pages, new, page_table, start, n_valid=None,
     chunk is always a fixed ``C``-shaped dispatch regardless of how much of
     it is real prompt. Returns ``(pages, scales)`` like ``update_cache_paged``.
 
-    Unquantized pools take one vectorized scatter (distinct valid rows hit
-    distinct (page, offset) cells — a slot owns its pages and positions are
-    consecutive). Quantized pools replay the rows through the per-token
-    monotone-amax write so chunked prefill shares the exact growth semantics
-    (and drift characteristics) of the decode write path."""
+    Unquantized pools and per-token-scale quantized pools
+    (``scales.ndim == 3``) take one vectorized scatter (distinct valid rows
+    hit distinct (page, offset) cells — a slot owns its pages and positions
+    are consecutive; per-token scales make every row's encode independent,
+    bit-identical to the decode write path's row encode). Per-(page, head)
+    quantized pools (``scales.ndim == 2``) replay the rows through the
+    per-token monotone-amax write so chunked prefill shares the exact
+    growth semantics (and drift characteristics) of the decode write
+    path."""
     B, C = new.shape[:2]
     start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (B,))
     nv = jnp.broadcast_to(
         jnp.asarray(C if n_valid is None else n_valid, jnp.int32).reshape(-1),
         (B,))
     ps = pages.shape[1]
-    if scales is None:
+    if scales is None or scales.ndim == 3:
         idx = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]   # [B,C]
         live = jnp.arange(C)[None] < nv[:, None]                      # [B,C]
         pid = jnp.take_along_axis(page_table, idx // ps, axis=1)
         pid = jnp.where(live, pid, 0)
         rows = jnp.where(live[..., None, None], new, 0)
-        return pages.at[pid, idx % ps].set(rows.astype(pages.dtype)), None
+        if scales is None:
+            return pages.at[pid, idx % ps].set(rows.astype(pages.dtype)), None
+        from repro.models import kv_quant
+        rows = rows.astype(jnp.float32)
+        row_scale = jnp.max(jnp.abs(rows), -1) / kv_quant.qmax(pages.dtype)
+        codes = kv_quant.encode(rows, row_scale[..., None], pages.dtype)
+        return (pages.at[pid, idx % ps].set(codes),
+                scales.at[pid, idx % ps].set(row_scale))
 
     def body(i, carry):
         pages, scales = carry
@@ -539,7 +581,8 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, index,
                            k_scales=None, v_scales=None):
     """Single-token decode against a paged KV pool. q [B,1,N,h]; pages
     [num_pages, page_size, K, h]; page_table [B,npg]; index scalar or [B];
-    k/v_scales [num_pages, K] float32 for quantized pools (None otherwise).
+    k/v_scales [num_pages, K] or [num_pages, page_size, K] float32 for
+    quantized pools (None otherwise).
 
     With ``opts.use_pallas`` the per-slot paged flash-decode kernel gathers
     KV blocks (and their scales) through the page table inside the kernel
@@ -624,8 +667,9 @@ def run_attention_core(route: str, q, k, v, *, opts: ModelOptions,
     the page pools [num_pages, page_size, K, h] (paged routes, with
     ``page_table`` and optional quantization ``*_scales``). ``index`` is
     the decode position / chunk start (scalar or per-slot [B]);
-    ``live_len`` (static int or None) bounds the banded chunk cores' key
-    axis to the live prefix — see ``band_len``."""
+    ``live_len`` (static int, per-slot tuple of ints, or None) bounds the
+    banded chunk cores' key axis to the live prefix — see ``band_len`` and
+    ``live_bound``."""
     # -- decode: one token against the cache --------------------------------
     if route == "decode_ring":
         return attention_decode_ring(q, k, v, index)
@@ -650,7 +694,7 @@ def run_attention_core(route: str, q, k, v, *, opts: ModelOptions,
     band = opts.prefill_band
     if route in ("chunk_flash", "chunk_banded"):
         smax = k.shape[1]
-        Lb = band_len(smax if live_len is None else live_len, band, smax)
+        Lb = band_len(live_bound(live_len, smax), band, smax)
         kb, vb = k[:, :Lb], v[:, :Lb]
         if route == "chunk_flash":
             from repro.kernels.chunk_prefill import ops as cp_ops
@@ -660,8 +704,7 @@ def run_attention_core(route: str, q, k, v, *, opts: ModelOptions,
         return attention_chunk_banded(q, kb, vb, index, window, band)
     if route in ("chunk_paged_flash", "chunk_banded_gather"):
         ps, npg = k.shape[1], page_table.shape[1]
-        Lb = band_len(npg * ps if live_len is None else live_len, band,
-                      npg * ps)
+        Lb = band_len(live_bound(live_len, npg * ps), band, npg * ps)
         pt = page_table[:, :(Lb + ps - 1) // ps]
         if route == "chunk_paged_flash":
             from repro.kernels.chunk_prefill import ops as cp_ops
@@ -741,10 +784,18 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
             # per-page quantization scales (see models.kv_quant)
             k_sc, v_sc = cache[2:] if len(cache) == 4 else (None, None)
             if S == 1:
+                # n_valid (0 or 1 per slot) masks speculative draft writes
+                # for dead slots / positions past the cache into the
+                # null-page sink — take_along_axis would otherwise *clamp*
+                # an out-of-range page lookup onto the slot's last page
+                valid = (jnp.asarray(n_valid) > 0) if n_valid is not None \
+                    else None
                 k_cache, k_sc = update_cache_paged(cache[0], k, page_table,
-                                                   cache_index, k_sc)
+                                                   cache_index, k_sc,
+                                                   valid=valid)
                 v_cache, v_sc = update_cache_paged(cache[1], v, page_table,
-                                                   cache_index, v_sc)
+                                                   cache_index, v_sc,
+                                                   valid=valid)
             else:   # prefill chunk: page-wise scatter at cache_index
                 k_cache, k_sc = update_cache_paged_chunk(
                     cache[0], k, page_table, cache_index, n_valid, k_sc)

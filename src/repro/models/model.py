@@ -25,8 +25,9 @@ from repro.models.params import PSpec, init_params, param_shapes  # re-export
 from repro.models.stacks import init_caches  # re-export
 
 __all__ = ["model_template", "forward", "prefill", "prefill_chunk",
-           "embed_prompt", "decode_step", "decode_loop", "encode_vision",
-           "init_params", "init_caches", "ModelOptions"]
+           "embed_prompt", "decode_step", "draft_step", "verify_chunk",
+           "decode_loop", "encode_vision", "init_params", "init_caches",
+           "ModelOptions"]
 
 
 def model_template(cfg: ModelConfig) -> Dict:
@@ -246,6 +247,68 @@ def decode_step(cfg: ModelConfig, opts: ModelOptions, params, token,
                                      positions, caches=caches,
                                      cache_index=index,
                                      page_table=page_table)
+    return _logits(params, x, cfg), caches
+
+
+def draft_step(cfg: ModelConfig, opts: ModelOptions, params, token, caches,
+               index, draft_blocks: int, page_table=None, n_valid=None):
+    """Layer-truncated decode step — the self-speculative *draft* pass.
+
+    Like ``decode_step`` but only the leading ``draft_blocks`` scanned
+    decoder blocks run (``stacks.apply_decoder(n_blocks=...)``); the
+    truncated hidden state early-exits through the shared final norm +
+    lm head. The draft writes its leading-layer KV into the *same* caches
+    the verify pass will rewrite, so no separate draft cache exists —
+    rejected positions are neutralized by the verify chunk's full-model
+    re-write at those positions. ``n_valid`` (0/1 per slot) masks writes
+    for dead slots and positions past the cache capacity (dense scatter
+    drop / paged null-page sink). Returns (logits [B,1,V], caches)."""
+    B = token.shape[0]
+    idx = jnp.asarray(index, jnp.int32)
+    positions = (jnp.full((B, 1), idx, jnp.int32) if idx.ndim == 0
+                 else idx[:, None])
+    x = _embed_tokens(params, token, cfg, positions=positions)
+    x = constrain(x, "batch", "act_seq", "act_embed")
+    x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
+                                     positions, caches=caches,
+                                     cache_index=index,
+                                     page_table=page_table, n_valid=n_valid,
+                                     n_blocks=draft_blocks)
+    return _logits(params, x, cfg), caches
+
+
+def verify_chunk(cfg: ModelConfig, opts: ModelOptions, params, tokens,
+                 caches, cache_index, n_valid=None, page_table=None,
+                 live_len=None):
+    """Speculative *verify* pass: K candidate tokens per slot through the
+    full model in one banded chunk-prefill dispatch.
+
+    Like ``prefill_chunk`` with three differences: ``tokens`` [B, K] int32
+    are embedded here (the candidates are produced on device, not sliced
+    from prompt embeddings); ``cache_index`` may be a per-slot [B] vector —
+    each slot's chunk starts at its own live position (positions are
+    ``cache_index[:, None] + arange(K)``); and the logits of *every* row
+    come back as [B, K, V] — the acceptance rule needs all K next-token
+    argmaxes, not just the last valid one (K is small, so the full-chunk
+    lm-head projection is cheap, unlike prefill's C-sized chunks).
+    ``n_valid`` (scalar or [B]) masks rows past a slot's cache capacity out
+    of the write path; their logits are garbage and the engine's budget
+    clamp guarantees the acceptance rule never consumes them. The chunk
+    write rewrites **all** layers at positions ``cache_index ..
+    cache_index+K-1``, which is what erases the draft pass's stale
+    leading-layer KV (and any previous round's rejected rows) before
+    anything reads those positions."""
+    B, K = tokens.shape
+    idx = jnp.asarray(cache_index, jnp.int32)
+    start = jnp.broadcast_to(idx.reshape(-1, 1), (B, 1))
+    positions = start + jnp.arange(K, dtype=jnp.int32)[None]
+    x = _embed_tokens(params, tokens, cfg, positions=positions)
+    x = constrain(x, "batch", "act_seq", "act_embed")
+    x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
+                                     positions, caches=caches,
+                                     cache_index=cache_index,
+                                     page_table=page_table, n_valid=n_valid,
+                                     live_len=live_len)
     return _logits(params, x, cfg), caches
 
 

@@ -261,7 +261,7 @@ def apply_sublayer(p, x, cfg: ModelConfig, opts: L.ModelOptions, kind: SubKind,
 def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
                   positions, caches=None, cache_index=None, ctx=None,
                   train: bool = False, page_table=None, n_valid=None,
-                  live_len=None):
+                  live_len=None, n_blocks: Optional[int] = None):
     """Run the full decoder stack. Returns (x, new_caches).
 
     ``page_table`` [B, npg] switches attention cache leaves to the paged
@@ -269,9 +269,25 @@ def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
     shared by every layer, captured as a constant by the layer scan.
     ``n_valid`` masks a prefill chunk's padding rows out of the cache write
     path; ``live_len`` (static) bounds the banded chunk core's key axis to
-    the live cache prefix (see layers.attention)."""
+    the live cache prefix (see layers.attention).
+
+    ``n_blocks`` (static) truncates the stack to its leading ``n_blocks``
+    scanned blocks — the self-speculative *draft* pass: the shallow model
+    shares the full model's parameters and caches (its leading-layer KV
+    writes land in the real cache, where the verify pass overwrites them),
+    runs ``n_blocks / nblocks`` of the depth, and the caller early-exits
+    through the final norm + lm head. The tail sublayers are skipped and
+    their caches pass through untouched (the returned tree keeps the full
+    structure, so jitted carries are stable)."""
     period, nblocks, ntail = stack_plan(cfg)
     kinds = sub_kinds(cfg)
+    if n_blocks is not None:
+        if not 0 < n_blocks <= nblocks:
+            raise ValueError(f"n_blocks must be in 1..{nblocks}, "
+                             f"got {n_blocks}")
+        truncate = n_blocks < nblocks or ntail > 0
+    else:
+        truncate = False
 
     def block_body(x, block_params, block_caches):
         new_caches = {}
@@ -296,13 +312,25 @@ def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
                               policy=jax.checkpoint_policies.nothing_saveable)
 
     block_caches = caches.get("blocks") if caches else None
-    unroll = nblocks if opts.unroll_layers else 1
+    block_params = params["blocks"]
+    if truncate:
+        # leading-blocks draft: slice the stacked layer axis (static), scan
+        # the shallow stack, splice its cache updates back into the full tree
+        block_params = jax.tree_util.tree_map(lambda l: l[:n_blocks],
+                                              block_params)
+        if block_caches is not None:
+            block_caches_in = jax.tree_util.tree_map(lambda l: l[:n_blocks],
+                                                     block_caches)
+    else:
+        block_caches_in = block_caches
+    n_eff = n_blocks if truncate else nblocks
+    unroll = n_eff if opts.unroll_layers else 1
     if block_caches is None:
         # scan without cache xs
         def scan_nc(carry_x, bp):
             x, _ = body(carry_x, bp, None)
             return x, None
-        x, _ = jax.lax.scan(scan_nc, x, params["blocks"], unroll=unroll)
+        x, _ = jax.lax.scan(scan_nc, x, block_params, unroll=unroll)
         new_caches = None
     else:
         def scan_c(carry_x, pc):
@@ -310,9 +338,18 @@ def apply_decoder(params, x, cfg: ModelConfig, opts: L.ModelOptions,
             x, nc = body(carry_x, bp, bc)
             return x, nc
         x, new_block_caches = jax.lax.scan(scan_c, x,
-                                           (params["blocks"], block_caches),
+                                           (block_params, block_caches_in),
                                            unroll=unroll)
+        if truncate:
+            new_block_caches = jax.tree_util.tree_map(
+                lambda full, new: full.at[:n_blocks].set(new),
+                block_caches, new_block_caches)
         new_caches = {"blocks": new_block_caches}
+
+    if truncate:
+        if new_caches is not None and ntail and caches and "tail" in caches:
+            new_caches["tail"] = caches["tail"]
+        return x, new_caches
 
     if ntail:
         tail_new = {}
@@ -362,7 +399,8 @@ def apply_tower(params, embeds, enc: VisionConfig, opts: L.ModelOptions):
 def cache_template(cfg: ModelConfig, batch: int, max_seq: int,
                    dtype=jnp.bfloat16, opts: Optional[L.ModelOptions] = None,
                    *, paged: bool = False, num_pages: int = 0,
-                   page_size: int = 0, kv_dtype: str = "bf16"):
+                   page_size: int = 0, kv_dtype: str = "bf16",
+                   scale_granularity: str = "head"):
     """Shape tree (PSpec) for the decode cache; concrete zeros via init_caches.
 
     Dense (default): attention K/V leaves are per-slot ``[batch, seq, K, h]``
@@ -374,12 +412,19 @@ def cache_template(cfg: ModelConfig, batch: int, max_seq: int,
 
     ``kv_dtype`` (paged only) selects the pool storage: ``"bf16"`` keeps
     ``dtype``; ``"int8"``/``"fp8"`` store 1-byte codes and every K/V pool
-    leaf gets a sibling per-page-per-head float32 scale leaf
-    (``k_scale``/``v_scale`` ``[num_pages, K]`` — see models.kv_quant)."""
+    leaf gets a sibling float32 scale leaf (``k_scale``/``v_scale``) whose
+    shape follows ``scale_granularity``: ``"head"`` -> ``[num_pages, K]``
+    (per-page-per-head, the compact default), ``"token"`` ->
+    ``[num_pages, page_size, K]`` (per-row — rewrite-stable, required by
+    speculative decode; see models.kv_quant)."""
     period, nblocks, ntail = stack_plan(cfg)
     kinds = sub_kinds(cfg)
     opts = opts or L.ModelOptions()
     quantized = kv_quant.quant_dtype(kv_dtype) is not None
+    if scale_granularity not in kv_quant.SCALE_GRANULARITIES:
+        raise ValueError(f"scale_granularity must be one of "
+                         f"{kv_quant.SCALE_GRANULARITIES}, "
+                         f"got {scale_granularity!r}")
     if paged:
         if num_pages <= 0 or page_size <= 0:
             raise ValueError("paged cache_template needs num_pages/page_size")
@@ -401,10 +446,13 @@ def cache_template(cfg: ModelConfig, batch: int, max_seq: int,
                                 cfg.head_dim),
                                (None, None, "act_kv_heads", None))
                 if quantized:
-                    c["k_scale"] = PSpec((num_pages, cfg.num_kv_heads),
-                                         (None, "act_kv_heads"))
-                    c["v_scale"] = PSpec((num_pages, cfg.num_kv_heads),
-                                         (None, "act_kv_heads"))
+                    sshape, sspec = ((num_pages, cfg.num_kv_heads),
+                                     (None, "act_kv_heads"))
+                    if scale_granularity == "token":
+                        sshape = (num_pages, page_size, cfg.num_kv_heads)
+                        sspec = (None, None, "act_kv_heads")
+                    c["k_scale"] = PSpec(sshape, sspec)
+                    c["v_scale"] = PSpec(sshape, sspec)
                 if kind.cross and cfg.encoder:
                     c["xk"] = PSpec((batch, cfg.encoder.num_tokens,
                                      cfg.num_kv_heads, cfg.head_dim),
@@ -470,10 +518,11 @@ def cache_dtype(path_key: str, dtype, kv_dtype: str = "bf16"):
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
                 dtype=jnp.bfloat16, opts=None, *, paged: bool = False,
                 num_pages: int = 0, page_size: int = 0,
-                kv_dtype: str = "bf16"):
+                kv_dtype: str = "bf16", scale_granularity: str = "head"):
     t = cache_template(cfg, batch, max_seq, dtype, opts, paged=paged,
                        num_pages=num_pages, page_size=page_size,
-                       kv_dtype=kv_dtype)
+                       kv_dtype=kv_dtype,
+                       scale_granularity=scale_granularity)
     return jax.tree_util.tree_map_with_path(
         lambda path, s: jnp.zeros(s.shape, cache_dtype(path[-1].key, dtype,
                                                        kv_dtype)),
@@ -491,7 +540,8 @@ def is_paged_leaf(path) -> bool:
 
 
 def is_scale_leaf(path) -> bool:
-    """Whether a cache-pytree leaf is a quantization scale sibling
-    (``[num_pages, K]`` float32) of a paged K/V pool leaf."""
+    """Whether a cache-pytree leaf is a quantization scale sibling of a
+    paged K/V pool leaf (``[num_pages, K]`` float32 at ``"head"``
+    granularity, ``[num_pages, page_size, K]`` at ``"token"``)."""
     key = getattr(path[-1], "key", path[-1])
     return key in ("k_scale", "v_scale")

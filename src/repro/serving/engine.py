@@ -18,6 +18,19 @@ Two decode paths:
   first-order for the memory-bound action-generation phase.
 - **reference**: the original one-token-per-tick path (``step()``), kept for
   equivalence testing and as the bit-exactness oracle under greedy sampling.
+- **speculative** (``spec_decode=True``; fused-only, greedy-only): each
+  round of the fused tick drafts ``spec_k - 1`` tokens with a
+  layer-truncated (optionally int8/fp8 weight-quantized) draft of the
+  *same* model, verifies all ``spec_k`` positions through the full model in
+  one banded chunk-prefill dispatch against the live cache, and emits the
+  greedy longest-prefix-accepted run plus one bonus token — bit-equal to
+  the reference stream at up to ``spec_k`` accepted tokens per full
+  weight+cache HBM pass, which is exactly the memory-bound
+  action-generation pass the paper measures as the bottleneck. Rejected
+  speculative KV needs no undo: the next round's full-model chunk rewrites
+  those positions before any read (causal masking never looks past a
+  slot's live position), and rows past the cache capacity sink into the
+  paged null page / dense scatter drop. See docs/speculative.md.
 
 Two cache layouts (``paged=``):
 
@@ -74,7 +87,8 @@ from repro.configs.base import ModelConfig
 from repro.models import kv_quant
 from repro.models import model as M
 from repro.models.layers import ModelOptions, band_len
-from repro.models.stacks import cache_batch_axis, is_paged_leaf, is_scale_leaf
+from repro.models.stacks import (cache_batch_axis, is_paged_leaf,
+                                 is_scale_leaf, stack_plan)
 from repro.serving import sampler as S
 from repro.serving.kv_pool import KVPool, PoolExhausted
 from repro.serving.scheduler import ChunkedScheduler, ChunkPlan, PrefillTask
@@ -154,6 +168,22 @@ class EngineStats:
     # never exceeds its token budget)
     tick_key_lanes: List[int] = field(default_factory=list)  # per tick: key
     # lanes (rows x banded length) the tick's prefill dispatches attended
+    # speculative decode (spec_decode=True). A verify "pass" is one
+    # full-model chunk dispatch over spec_k positions for one live slot —
+    # the weight+cache HBM pass speculation amortizes. accept_hist[n]
+    # counts passes that emitted n tokens (accepted prefix + bonus), so
+    # emitted / passes — phase_report()["spec_accept_per_pass"] — is the
+    # tokens-per-HBM-pass factor the spec_decode bench gates >= 2x.
+    # Draft cost is tracked both as raw truncated steps and as full-model
+    # pass equivalents (steps x draft_layers / num_layers), giving the
+    # draft/verify phase split. spec_key_lanes uses the *per-slot* banded
+    # bound (satellite: per-slot live bounds) vs the max_seq view.
+    spec_verify_passes: int = 0
+    spec_draft_steps: int = 0            # truncated draft steps executed
+    spec_draft_pass_equiv: float = 0.0   # draft cost in full-model passes
+    spec_accept_hist: List[int] = field(default_factory=list)
+    spec_key_lanes: int = 0              # verify rows x per-slot band bound
+    spec_key_lanes_full: int = 0         # verify rows x max_seq
 
     def phase_report(self) -> Dict[str, float]:
         """Figure-2-style wall-time decomposition, plus decode-tick latency
@@ -182,6 +212,20 @@ class EngineStats:
         if self.prefill_key_lanes_full:
             rep["prefill_key_lane_ratio"] = (self.prefill_key_lanes
                                              / self.prefill_key_lanes_full)
+        if self.spec_verify_passes:
+            emitted = sum(n * c for n, c in enumerate(self.spec_accept_hist))
+            rep["spec_verify_passes"] = float(self.spec_verify_passes)
+            rep["spec_accept_per_pass"] = emitted / self.spec_verify_passes
+            rep["spec_accept_hist"] = [int(c) for c in self.spec_accept_hist]
+            rep["spec_draft_steps"] = float(self.spec_draft_steps)
+            rep["spec_draft_pass_equiv"] = float(self.spec_draft_pass_equiv)
+            # draft/verify phase split, in full-model-pass equivalents:
+            # what fraction of the tick's model work went to drafting
+            tot = self.spec_draft_pass_equiv + self.spec_verify_passes
+            rep["spec_draft_frac"] = float(self.spec_draft_pass_equiv / tot)
+            if self.spec_key_lanes_full:
+                rep["spec_key_lane_ratio"] = (self.spec_key_lanes
+                                              / self.spec_key_lanes_full)
         return rep
 
 
@@ -269,6 +313,112 @@ def _fused_tick(cfg: ModelConfig, opts: ModelOptions, K: int, eos: int,
     return tokens, caches, index, budget, done, key, out, n_emit, steps
 
 
+def _fused_spec_tick(cfg: ModelConfig, opts: ModelOptions, T: int, K: int,
+                     draft_blocks: int, eos: int, stop_on_finish: bool,
+                     max_seq: int, live_len: int, params, draft_params,
+                     tokens, caches, index, budget, done, max_steps,
+                     page_table=None):
+    """Self-speculative fused tick: each while-loop round is
+    draft -> verify -> accept instead of one decode step.
+
+    Round anatomy (per live slot at position ``index``, current token
+    ``tokens`` whose KV is not yet written — decode writes-then-attends):
+
+    1. **Draft**: ``K - 1`` layer-truncated greedy steps
+       (``M.draft_step`` over the leading ``draft_blocks`` blocks of
+       ``draft_params``) roll out candidates; together with the current
+       token they form the chunk [B, K] at positions ``index..index+K-1``.
+       The draft's leading-layer KV lands in the shared cache — stale
+       after this round, rewritten below.
+    2. **Verify**: one full-model banded chunk dispatch
+       (``M.verify_chunk``) runs all K positions, writing *all* layers'
+       KV at those positions (which erases the draft's partial writes and
+       any previous round's rejected rows before anything reads them) and
+       returning every position's logits.
+    3. **Accept** (``S.spec_accept``): greedy longest-prefix acceptance +
+       one bonus token; ``n_emit in 1..K`` tokens per live slot, capped by
+       the slot's remaining budget, the tick quota ``cap - e``, and a
+       first emitted EOS. The emitted tokens are the *verifier's* argmaxes,
+       so streams are bit-equal to the per-token reference; the carry
+       token is the last emitted one and ``index += n_emit``.
+
+    Rejected rows (``index + n_emit .. index + K - 1``) hold stale KV but
+    are never read: causal masking hides positions past a slot's query,
+    and the next round's verify rewrites them first (position re-write
+    rollback). Rows at or past ``max_seq`` are masked out of the write
+    path entirely (``n_valid``) — dense scatter drop / paged null-page
+    sink — so speculation never corrupts the last page. ``live_len`` is
+    the static banded key bound covering the oldest slot through this
+    tick's deepest verify row (the host collapses the per-slot bounds to
+    their max — a per-slot tuple as a static jit argument would retrace
+    per batch age mix).
+
+    Extra carry vs ``_fused_tick``: ``hist`` [K+1] counts verify passes
+    by tokens emitted (the accepted-per-pass histogram) and ``passes``
+    [B] counts per-slot verify passes (its denominator). Greedy-only, so
+    no RNG key rides the carry."""
+    B = tokens.shape[0]
+    out0 = jnp.full((B, T), -1, jnp.int32)
+    e0 = jnp.zeros((B,), jnp.int32)
+    hist0 = jnp.zeros((K + 1,), jnp.int32)
+    passes0 = jnp.zeros((B,), jnp.int32)
+    entry_done = done
+    cap = jnp.minimum(jnp.asarray(T, jnp.int32),
+                      jnp.asarray(max_steps, jnp.int32))
+    kcol = jnp.arange(K, dtype=jnp.int32)
+
+    def cond(c):
+        _, _, _, _, done, _, e, _, _, _ = c
+        go = jnp.any(~done & (e < cap))
+        if stop_on_finish:
+            go &= ~jnp.any(done & ~entry_done)
+        return go
+
+    def body(c):
+        tokens, caches, index, budget, done, out, e, hist, passes, iters = c
+        live = ~done & (e < cap)
+        # -- draft: K-1 truncated steps, chunk[0] is the current token -----
+        cur = tokens
+        chunk = [cur]
+        for j in range(K - 1):
+            pos = index + j
+            nv = (live & (pos < max_seq)).astype(jnp.int32)
+            dlogits, caches = M.draft_step(cfg, opts, draft_params, cur,
+                                           caches, pos, draft_blocks,
+                                           page_table=page_table, n_valid=nv)
+            cur = jnp.argmax(dlogits[:, -1], -1).astype(jnp.int32)[:, None]
+            chunk.append(cur)
+        chunk = jnp.concatenate(chunk, axis=1)                       # [B,K]
+        # -- verify: all K positions through the full model in one chunk --
+        nv = jnp.where(live, jnp.clip(max_seq - index, 0, K), 0)
+        vlogits, caches = M.verify_chunk(cfg, opts, params, chunk, caches,
+                                         index, n_valid=nv,
+                                         page_table=page_table,
+                                         live_len=live_len)
+        verify = jnp.argmax(vlogits, -1).astype(jnp.int32)           # [B,K]
+        # -- accept: longest prefix + bonus, budget/quota/EOS capped ------
+        n_emit, newly = S.spec_accept(chunk, verify, eos=eos,
+                                      budget=budget, room=cap - e,
+                                      live=live)
+        cols = jnp.where(live[:, None] & (kcol[None] < n_emit[:, None]),
+                         e[:, None] + kcol[None], T)    # T = dropped
+        out = out.at[jnp.arange(B)[:, None], cols].set(verify, mode="drop")
+        nxt = jnp.take_along_axis(
+            verify, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)
+        tokens = jnp.where(live[:, None], nxt, tokens)
+        index = index + jnp.where(live, n_emit, 0)
+        budget = budget - jnp.where(live, n_emit, 0)
+        e = e + jnp.where(live, n_emit, 0)
+        hist = hist.at[jnp.where(live, n_emit, K + 1)].add(1, mode="drop")
+        passes = passes + live.astype(jnp.int32)
+        return (tokens, caches, index, budget, done | newly, out, e, hist,
+                passes, iters + 1)
+
+    init = (tokens, caches, index, budget, done, out0, e0, hist0, passes0,
+            jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, init)
+
+
 # Jitted stages are cached per static signature (configs are frozen
 # dataclasses, hence hashable), so constructing many engines — tests, sweeps,
 # one engine per model replica — shares compiled code instead of re-tracing.
@@ -320,6 +470,21 @@ def _jit_tick(cfg: ModelConfig, opts: ModelOptions, tick_tokens: int,
                                      stop_on_finish))
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_spec_tick(cfg: ModelConfig, opts: ModelOptions, tick_tokens: int,
+                   spec_k: int, draft_blocks: int, eos: int,
+                   stop_on_finish: bool, max_seq: int):
+    """Speculative fused tick, jitted per engine signature. ``live_len``
+    (first arg, static) is the banded verify key bound — the engine rounds
+    it to whole bands, so it takes at most ``max_seq / prefill_band``
+    distinct values. Dense engines pass ``page_table=None`` (an empty
+    pytree, not a trace problem)."""
+    return jax.jit(functools.partial(_fused_spec_tick, cfg, opts,
+                                     tick_tokens, spec_k, draft_blocks, eos,
+                                     stop_on_finish, max_seq),
+                   static_argnums=0)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, opts: ModelOptions, params,
                  n_slots: int = 4, max_seq: int = 512, eos: int = 1,
@@ -330,7 +495,11 @@ class ServingEngine:
                  num_pages: Optional[int] = None, prefix_cache: bool = True,
                  kv_dtype: str = "bf16", chunked_prefill: bool = False,
                  chunk_size: int = 32, token_budget: int = 64,
-                 reserve_pages: Optional[int] = None):
+                 reserve_pages: Optional[int] = None,
+                 spec_decode: bool = False, spec_k: int = 4,
+                 draft_layers: Optional[int] = None,
+                 draft_quant: Optional[str] = None,
+                 scale_granularity: Optional[str] = None):
         if tick_tokens < 1:
             raise ValueError(f"tick_tokens must be >= 1, got {tick_tokens}")
         if kv_quant.quant_dtype(kv_dtype) is not None and not paged:
@@ -367,6 +536,75 @@ class ServingEngine:
                     f"paged chunk-prefill kernel blocks the key axis per "
                     f"page, and bit-equality across chunkings needs the "
                     f"same partition as the dense kernel's bands")
+        self.spec_decode, self.spec_k = spec_decode, spec_k
+        self.draft_blocks = self.draft_layers = 0
+        self.draft_quant = draft_quant
+        if spec_decode:
+            if not fused:
+                raise ValueError("spec_decode requires the fused decode "
+                                 "path (fused=True)")
+            if temperature > 0:
+                raise ValueError("spec_decode is greedy-only: longest-"
+                                 "prefix acceptance re-emits the verifier's "
+                                 "argmax, which only matches the reference "
+                                 "stream at temperature 0")
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            if opts.window_cache:
+                raise ValueError("spec_decode and window_cache ring buffers "
+                                 "are mutually exclusive (rings don't "
+                                 "support positioned chunk writes)")
+            if cfg.encoder is not None:
+                raise ValueError("spec_decode does not support "
+                                 "encoder-decoder models")
+            if not all(cfg.is_attn_layer(i) for i in range(cfg.num_layers)):
+                raise ValueError("spec_decode requires attention-only "
+                                 "decoders (SSM state cannot roll back "
+                                 "rejected drafts by position re-write)")
+            if paged and opts.use_pallas and page_size != opts.prefill_band:
+                raise ValueError(
+                    f"spec_decode with paged=True and use_pallas requires "
+                    f"page_size ({page_size}) == ModelOptions.prefill_band "
+                    f"({opts.prefill_band}): the verify pass runs the paged "
+                    f"chunk-prefill kernel, whose key-axis partition must "
+                    f"match the dense kernel's bands for the bit-equality "
+                    f"contract (same constraint as chunked_prefill)")
+            period, nblocks, _ = stack_plan(cfg)
+            if draft_layers is None:
+                self.draft_blocks = max(1, nblocks // 2)
+            else:
+                if draft_layers % period or not (
+                        0 < draft_layers <= nblocks * period):
+                    raise ValueError(
+                        f"draft_layers must be a multiple of the stack "
+                        f"period ({period}) in 1..{nblocks * period}, "
+                        f"got {draft_layers}")
+                self.draft_blocks = draft_layers // period
+            self.draft_layers = self.draft_blocks * period
+            if draft_quant not in (None, "none", "int8", "fp8"):
+                raise ValueError(f"draft_quant must be None/'none'/'int8'/"
+                                 f"'fp8', got {draft_quant!r}")
+        quantized = kv_quant.quant_dtype(kv_dtype) is not None
+        if scale_granularity is not None and not quantized:
+            raise ValueError("scale_granularity applies only to quantized "
+                             "pools (kv_dtype int8/fp8)")
+        if quantized:
+            if scale_granularity is None:
+                scale_granularity = "token" if spec_decode else "head"
+            if scale_granularity not in kv_quant.SCALE_GRANULARITIES:
+                raise ValueError(
+                    f"scale_granularity must be one of "
+                    f"{kv_quant.SCALE_GRANULARITIES}, "
+                    f"got {scale_granularity!r}")
+            if spec_decode and scale_granularity == "head":
+                raise ValueError(
+                    "spec_decode on a quantized pool requires "
+                    "scale_granularity='token': shared per-(page, head) "
+                    "scales let a rejected draft row's amax requantize "
+                    "accepted rows on the same page, so speculative streams "
+                    "cannot stay bit-equal to the per-token reference "
+                    "(see docs/speculative.md)")
+        self.scale_granularity = scale_granularity    # None when unquantized
         self.cfg, self.opts, self.params = cfg, opts, params
         self.n_slots, self.max_seq, self.eos = n_slots, max_seq, eos
         self.prompt_len = prompt_len
@@ -394,7 +632,9 @@ class ServingEngine:
             self.caches = M.init_caches(cfg, n_slots, max_seq, jnp.float32,
                                         opts, paged=True, num_pages=num_pages,
                                         page_size=page_size,
-                                        kv_dtype=kv_dtype)
+                                        kv_dtype=kv_dtype,
+                                        scale_granularity=(scale_granularity
+                                                           or "head"))
             self._bytes_per_page = sum(
                 leaf.nbytes // num_pages for path, leaf in
                 jax.tree_util.tree_leaves_with_path(self.caches)
@@ -427,6 +667,16 @@ class ServingEngine:
                         if cfg.vision is not None else None)
         self._tick = _jit_tick(cfg, opts, tick_tokens, eos, temperature,
                                top_k, stop_on_finish)
+        self._spec_tick = None
+        if spec_decode:
+            # the weight-quantized draft shares the tree structure (and
+            # dtypes) of params — fake quantization round-trips values only
+            self.draft_params = (
+                kv_quant.fake_quantize_tree(params, draft_quant)
+                if draft_quant in ("int8", "fp8") else params)
+            self._spec_tick = _jit_spec_tick(cfg, opts, tick_tokens, spec_k,
+                                             self.draft_blocks, eos,
+                                             stop_on_finish, max_seq)
 
     def _sample_host(self, logits):
         """Host-path sampling (admission + reference step) with the same
@@ -579,11 +829,16 @@ class ServingEngine:
         self._preempt_slot(min(cands, key=lambda s: self._last_active[s]))
         return True
 
-    def _ensure_pages(self, steps: int):
+    def _ensure_pages(self, steps: int, extra: int = 0):
         """Pre-allocate pages covering every position the next tick may
         write (index .. index+steps-1 per live slot), and copy-on-write any
         shared page in that range (none in normal engine flow — admission
         only shares full prompt pages — but enforced, not assumed).
+        ``extra`` covers positions written but not necessarily *kept*: the
+        speculative tick writes up to ``spec_k - 1`` draft/verify rows past
+        the last accepted token, so its rounds need ``extra = spec_k - 1``
+        backing pages beyond the budget-capped emit range (rows past
+        ``max_seq`` are masked to the null sink instead and need none).
 
         Pool pressure degrades instead of crashing: if growth fails, the
         live slot holding the most pages (excluding the one being grown) is
@@ -605,7 +860,7 @@ class ServingEngine:
             start = int(self.index[s])
             # never reserve past the slot's remaining budget — backing pages
             # a finishing slot cannot write could preempt a healthy one
-            end = min(start + min(steps, max(int(self.budget[s]), 1)),
+            end = min(start + min(steps, max(int(self.budget[s]), 1)) + extra,
                       self.max_seq)
             while True:
                 try:
@@ -865,19 +1120,27 @@ class ServingEngine:
 
     def _decode_tick(self, max_steps: int) -> int:
         """The fused decode stage of one tick: up to ``max_steps`` (<= the
-        compiled ``tick_tokens`` bound) device steps, one host sync."""
+        compiled ``tick_tokens`` bound) device steps, one host sync. In
+        scheduler mode ``max_steps`` is the planned per-slot token cap —
+        with ``spec_decode`` it bounds *accepted* tokens, not passes, so
+        the scheduler's token-budget accounting holds unchanged (a verify
+        pass that would overshoot the cap has its emit clamped)."""
         active = [s for s in range(self.n_slots) if self.slots[s] is not None]
         if not active:
             return 0
         pt = None
         if self.paged:
-            self._ensure_pages(min(max_steps, self.tick_tokens))
+            self._ensure_pages(min(max_steps, self.tick_tokens),
+                               extra=self.spec_k - 1 if self.spec_decode
+                               else 0)
             pt = self._page_table_device()
             # growth may have preempted a slot under pool pressure
             active = [s for s in range(self.n_slots)
                       if self.slots[s] is not None]
             if not active:
                 return 0
+        if self.spec_decode:
+            return self._decode_tick_spec(max_steps, active, pt)
         t0 = time.perf_counter()
         done0 = np.asarray([self.slots[s] is None
                             for s in range(self.n_slots)])
@@ -909,6 +1172,76 @@ class ServingEngine:
             if done_h[s]:
                 self._finish_slot(s, now)
         self.stats.tokens_decoded += emitted
+        return emitted
+
+    def _decode_tick_spec(self, max_steps: int, active: List[int],
+                          pt) -> int:
+        """Speculative decode stage: draft -> verify -> accept rounds on
+        device (``_fused_spec_tick``), one host sync. Called by
+        ``_decode_tick`` after page growth reserved ``spec_k - 1`` extra
+        write rows per slot."""
+        t0 = time.perf_counter()
+        st = self.stats
+        K = self.spec_k
+        cap = int(min(max_steps, self.tick_tokens))
+        idx0 = self.index.copy()
+        done0 = np.asarray([self.slots[s] is None
+                            for s in range(self.n_slots)])
+        # per-slot static verify bounds (satellite: per-slot live bounds in
+        # chunk dispatch): each slot's deepest verify row this tick is
+        # index + cap + K - 2, so its banded key bound is independent of
+        # the batch's oldest slot. The *dispatch* uses the collapsed max —
+        # a per-slot tuple as a static jit argument would retrace per age
+        # mix — while the per-slot bounds drive the key-lane accounting,
+        # which is what the mixed-age over-attend ratio is measured from.
+        bounds = {s: band_len(min(int(idx0[s]) + cap + K - 1, self.max_seq),
+                              self.opts.prefill_band, self.max_seq)
+                  for s in active}
+        live_len = max(bounds.values())
+        (tokens, self.caches, index, budget, done, out, e, hist, passes,
+         iters) = self._spec_tick(
+            live_len, self.params, self.draft_params,
+            jnp.asarray(self.tokens), self.caches, jnp.asarray(self.index),
+            jnp.asarray(self.budget), jnp.asarray(done0),
+            jnp.asarray(max_steps, jnp.int32), pt)
+        (out_h, e_h, idx_h, bud_h, done_h, tok_h, hist_h, passes_h,
+         iters_h) = jax.device_get((out, e, index, budget, done, tokens,
+                                    hist, passes, iters))
+        now = time.perf_counter()
+        st.decode_syncs += 1
+        st.ticks += 1
+        # one loop round == one full-model pass (the verify chunk), same
+        # HBM-pass denomination as the plain fused tick's per-token steps
+        st.device_steps += int(iters_h)
+        vp = int(passes_h.sum())
+        st.spec_verify_passes += vp
+        st.spec_draft_steps += vp * (K - 1)
+        st.spec_draft_pass_equiv += (vp * (K - 1) * self.draft_layers
+                                     / max(1, self.cfg.num_layers))
+        if len(st.spec_accept_hist) < K + 1:
+            st.spec_accept_hist.extend(
+                [0] * (K + 1 - len(st.spec_accept_hist)))
+        for n, c in enumerate(hist_h):
+            st.spec_accept_hist[n] += int(c)
+        for s in active:
+            st.spec_key_lanes += int(passes_h[s]) * K * bounds[s]
+            st.spec_key_lanes_full += int(passes_h[s]) * K * self.max_seq
+        st.decode_time += now - t0
+        st.decode_tick_s.append(now - t0)
+        self.index = np.array(idx_h, np.int32)
+        self.budget = np.array(bud_h, np.int32)
+        self.tokens = np.array(tok_h, np.int32)
+        emitted = 0
+        for s in active:
+            req = self.slots[s]
+            k = int(e_h[s])
+            req.out_tokens.extend(int(t) for t in out_h[s, :k])
+            emitted += k
+            if k:
+                self._last_active[s] = now
+            if done_h[s]:
+                self._finish_slot(s, now)
+        st.tokens_decoded += emitted
         return emitted
 
     # -- chunked-prefill scheduler mode ------------------------------------
@@ -1283,11 +1616,13 @@ def _scatter_pages(caches, cache1, dest_pages, page_size: int):
     used both for prefix-shared pages (already holding identical KV) and for
     pages past the slot's allocation.
 
-    Quantized pools: each prompt page's scale is its amax over the page
-    (per KV head) / qmax — computed from the fp32 prefill KV, written to the
-    sibling ``k_scale``/``v_scale`` leaf for the same destination pages, and
-    used to encode the value rows. Decode writes into the tail page later
-    grow that scale monotonically (see layers.update_cache_paged)."""
+    Quantized pools: each prompt page's scale is its amax / qmax at the
+    pool's granularity — per (page, KV head) or per token row, inferred
+    from the scale leaf's shape — computed from the fp32 prefill KV,
+    written to the sibling ``k_scale``/``v_scale`` leaf for the same
+    destination pages, and used to encode the value rows. Decode writes
+    into the tail page later grow a "head" scale monotonically, or replace
+    a "token" row outright (see layers.update_cache_paged)."""
     flat_big, treedef = jax.tree_util.tree_flatten_with_path(caches)
     big_by_key = {_path_keys(p): leaf for p, leaf in flat_big}
     flat1 = {_path_keys(p): leaf for p, leaf
@@ -1316,14 +1651,19 @@ def _scatter_pages(caches, cache1, dest_pages, page_size: int):
         # encoded under
         if is_scale_leaf(path):
             vkey = keys[:-1] + ("k" if keys[-1] == "k_scale" else "v",)
+            gran = ("token" if big.ndim == (4 if stacked else 3)
+                    else "head")       # leaf shape encodes the granularity
             _, scale = kv_quant.quantize_page_rows(page_rows(vkey, stacked),
-                                                   big_by_key[vkey].dtype)
+                                                   big_by_key[vkey].dtype,
+                                                   gran)
             out.append(big.at[:, dest_pages].set(scale) if stacked
                        else big.at[dest_pages].set(scale))
             continue
         rows = page_rows(keys, stacked)
         if kv_quant.is_quantized(big.dtype):
-            rows, _ = kv_quant.quantize_page_rows(rows, big.dtype)
+            sc = big_by_key[keys[:-1] + (keys[-1] + "_scale",)]
+            gran = "token" if sc.ndim == (4 if stacked else 3) else "head"
+            rows, _ = kv_quant.quantize_page_rows(rows, big.dtype, gran)
         out.append(big.at[:, dest_pages].set(rows.astype(big.dtype))
                    if stacked else
                    big.at[dest_pages].set(rows.astype(big.dtype)))

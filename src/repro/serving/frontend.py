@@ -256,6 +256,36 @@ class AsyncFrontend:
         while any(self._staged) or any(self._live) or any(self._cancels):
             await asyncio.sleep(poll_s)
 
+    # -- observability -----------------------------------------------------
+    def stats_snapshot(self) -> Dict[str, float]:
+        """One flat, JSON-serializable dict of fleet health — the payload an
+        autoscaler or metrics scraper polls between ticks.
+
+        Keys: every :meth:`FrontendStats.report` entry under a
+        ``frontend_`` prefix, ``replicas``, and per-replica gauges
+        ``replica{i}_depth`` (staged + engine-pending), ``replica{i}_pending``
+        (engine-side only), ``replica{i}_tick_ewma_s`` (EWMA tick wall time —
+        with depth, the retry-after estimate Backpressure quotes), and
+        ``replica{i}_tokens_decoded``; speculative replicas additionally
+        report ``replica{i}_spec_accept_per_pass``. All values are floats,
+        the snapshot is safe to take before ``start()`` (gauges read zero),
+        and nothing here blocks on a tick."""
+        snap: Dict[str, float] = {}
+        for k, v in self.stats.report().items():
+            snap[f"frontend_{k}"] = float(v)
+        snap["replicas"] = float(len(self.engines))
+        for i, eng in enumerate(self.engines):
+            snap[f"replica{i}_depth"] = float(self.depth(i))
+            snap[f"replica{i}_pending"] = float(eng.pending)
+            snap[f"replica{i}_tick_ewma_s"] = float(self._tick_ewma[i])
+            snap[f"replica{i}_tokens_decoded"] = float(
+                eng.stats.tokens_decoded)
+            ph = eng.stats.phase_report()
+            if "spec_accept_per_pass" in ph:
+                snap[f"replica{i}_spec_accept_per_pass"] = float(
+                    ph["spec_accept_per_pass"])
+        return snap
+
     # -- admission ---------------------------------------------------------
     def depth(self, i: int) -> int:
         """Replica ``i``'s admission depth: staged + engine-pending."""

@@ -28,3 +28,50 @@ def sample_token(logits, key, temperature: float = 0.0, top_k: int = 0):
     if temperature <= 0:
         return greedy(logits)
     return sample(logits, key, temperature, top_k)
+
+
+def spec_accept(draft, verify, *, eos: int, budget, room, live):
+    """Greedy longest-prefix acceptance for self-speculative decode.
+
+    ``draft`` [B, K] is the candidate chunk fed to the verifier: row 0 the
+    token the reference would feed next (always "accepted" — it was already
+    emitted or carried), rows 1..K-1 the draft model's proposals. ``verify``
+    [B, K] is the full model's greedy argmax at each position; row j is the
+    reference's next token after consuming ``draft[:, :j+1]``, so proposal
+    ``draft[:, j]`` is *correct* iff it equals ``verify[:, j-1]``, and
+    acceptance stops at the first mismatch (``a`` = accepted proposals).
+    The emitted run is ``verify[:, :a+1]``: the ``a`` accepted tokens
+    re-emitted from the verifier — bit-identical to the per-token reference
+    stream — plus one **bonus** token, the verifier's correction at the
+    first mismatch (or its extension when every proposal was accepted).
+    Either way a verify pass always advances >= 1 token, so speculation
+    never does worse than the plain fused tick in tokens per pass.
+
+    ``budget`` (remaining per-request token budget) and ``room`` (remaining
+    per-tick quota) [B] cap the emit count; a first EOS *inside* the
+    emitted run truncates it (tokens after an emitted EOS must never reach
+    the stream, exactly as the per-token reference stops). ``live`` [B]
+    marks slots participating this round; dead slots emit 0.
+
+    Returns ``(n_emit [B] int32, done [B] bool)``: live slots emit
+    ``1..K`` tokens (``verify[:, :n_emit]``); ``done`` marks slots whose
+    final emitted token is EOS or whose budget hit zero."""
+    B, K = draft.shape
+    budget = jnp.asarray(budget, jnp.int32)
+    room = jnp.asarray(room, jnp.int32)
+    if K > 1:
+        ok = jnp.cumprod((draft[:, 1:] == verify[:, :-1]).astype(jnp.int32),
+                         axis=1)
+        a = jnp.sum(ok, axis=1).astype(jnp.int32)       # accepted proposals
+    else:
+        a = jnp.zeros((B,), jnp.int32)
+    n_emit = jnp.minimum(a + 1, jnp.minimum(budget, room))
+    iseos = verify == eos
+    first_eos = jnp.argmax(iseos, axis=1).astype(jnp.int32)
+    eos_cut = jnp.where(iseos.any(axis=1), first_eos + 1, K + 1)
+    n_emit = jnp.minimum(n_emit, eos_cut)
+    n_emit = jnp.where(live, jnp.maximum(n_emit, 1), 0).astype(jnp.int32)
+    last = jnp.take_along_axis(verify, jnp.maximum(n_emit - 1, 0)[:, None],
+                               axis=1)[:, 0]
+    done = live & ((last == eos) | (budget - n_emit <= 0))
+    return n_emit, done

@@ -188,7 +188,16 @@ class ChunkedScheduler:
         this tick's chunk stage joins the same tick's decode stage (the
         engine re-reads the active set), adding up to ``decode_steps``
         unplanned decode tokens — deliberate: delaying that slot one tick
-        would cost first-token latency to enforce an accounting nicety."""
+        would cost first-token latency to enforce an accounting nicety.
+
+        ``decode_steps`` is denominated in *emitted tokens per slot*, not
+        engine-loop iterations — the contract that keeps this policy
+        mechanism-agnostic. The plain fused tick emits one token per loop
+        step, so the two readings coincide; the speculative tick
+        (``spec_decode=True``) emits a variable 1..spec_k accepted tokens
+        per verify pass and clamps its emit count to this same cap, so a
+        tick's decode stage never exceeds ``n_active * decode_steps``
+        tokens regardless of how few HBM passes produced them."""
         plan = TickPlan()
         if n_active:
             plan.decode_steps = max(

@@ -1,0 +1,275 @@
+"""Self-speculative decode: acceptance-rule units, spec-vs-reference
+bit-equality across layouts/dtypes/depths, pool accounting, live-bound
+normalization, and the front-end stats snapshot."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import ModelOptions, live_bound
+from repro.serving import AsyncFrontend, Request, ServingEngine
+from repro.serving.sampler import spec_accept
+from conftest import reduced_params
+
+ARCH = "smollm-135m"        # 4 reduced layers: draft depths 1..4
+
+
+# -- spec_accept: the pure acceptance rule ---------------------------------
+
+def _accept(draft, verify, eos=-999, budget=None, room=None, live=None):
+    draft = jnp.asarray(draft, jnp.int32)
+    verify = jnp.asarray(verify, jnp.int32)
+    B, K = draft.shape
+    budget = jnp.full((B,), 100, jnp.int32) if budget is None else \
+        jnp.asarray(budget, jnp.int32)
+    room = jnp.full((B,), 100, jnp.int32) if room is None else \
+        jnp.asarray(room, jnp.int32)
+    live = jnp.ones((B,), bool) if live is None else jnp.asarray(live, bool)
+    n_emit, done = spec_accept(draft, verify, eos=eos, budget=budget,
+                               room=room, live=live)
+    return np.asarray(n_emit), np.asarray(done)
+
+
+def test_accept_full_run_gets_bonus():
+    # verify extends the fully-accepted draft: K-1 accepted + 1 bonus
+    n, d = _accept([[5, 7, 9, 11]], [[7, 9, 11, 13]])
+    assert n.tolist() == [4] and d.tolist() == [False]
+
+
+def test_accept_first_mismatch_stops():
+    # proposal 7 accepted, 8 != 9 rejected -> 1 accepted + bonus
+    n, _ = _accept([[5, 7, 8, 11]], [[7, 9, 11, 13]])
+    assert n.tolist() == [2]
+    # immediate mismatch -> bonus token only (never less than 1)
+    n, _ = _accept([[5, 0, 0, 0]], [[7, 9, 11, 13]])
+    assert n.tolist() == [1]
+
+
+def test_accept_no_resurrection_after_mismatch():
+    # draft[3] "agrees" with verify[2] but sits after the first mismatch:
+    # the cumulative prefix rule must not count it
+    n, _ = _accept([[5, 7, 8, 11]], [[7, 9, 11, 13]])
+    assert n.tolist() == [2]
+
+
+def test_accept_eos_truncates_inside_run():
+    # full agreement, but verify emits EOS at position 1: stop there
+    n, d = _accept([[5, 7, -1, 11]], [[7, -1, 11, 13]], eos=-1)
+    assert n.tolist() == [2] and d.tolist() == [True]
+
+
+def test_accept_budget_and_room_cap():
+    n, d = _accept([[5, 7, 9, 11]], [[7, 9, 11, 13]], budget=[2])
+    assert n.tolist() == [2] and d.tolist() == [True]       # budget spent
+    n, d = _accept([[5, 7, 9, 11]], [[7, 9, 11, 13]], room=[3])
+    assert n.tolist() == [3] and d.tolist() == [False]      # tick quota
+    n, _ = _accept([[5, 7, 9, 11]], [[7, 9, 11, 13]], budget=[1])
+    assert n.tolist() == [1]
+
+
+def test_accept_dead_slot_emits_nothing():
+    n, d = _accept([[5, 7, 9, 11]], [[7, 9, 11, 13]], live=[False])
+    assert n.tolist() == [0] and d.tolist() == [False]
+
+
+def test_accept_k1_is_plain_decode():
+    n, d = _accept([[5]], [[9]])
+    assert n.tolist() == [1] and d.tolist() == [False]
+
+
+def test_accept_batch_mixed():
+    n, d = _accept([[5, 7, 9], [5, 0, 0], [5, 7, 9]],
+                   [[7, 9, 11], [7, 9, 11], [7, -1, 11]],
+                   eos=-1, budget=[100, 100, 100], live=[True, True, True])
+    assert n.tolist() == [3, 1, 2]
+    assert d.tolist() == [False, False, True]
+
+
+def test_accept_property_invariants():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(2, 6), st.data())
+    def inner(K, data):
+        B = 3
+        draft = data.draw(st.lists(st.lists(st.integers(0, 3),
+                                            min_size=K, max_size=K),
+                                   min_size=B, max_size=B))
+        verify = data.draw(st.lists(st.lists(st.integers(0, 3),
+                                             min_size=K, max_size=K),
+                                    min_size=B, max_size=B))
+        budget = data.draw(st.lists(st.integers(1, K + 2),
+                                    min_size=B, max_size=B))
+        n, d = _accept(draft, verify, eos=0, budget=budget)
+        for b in range(B):
+            assert 1 <= n[b] <= min(K, budget[b])
+            # emitted tokens are exactly the verifier's prefix, and every
+            # non-final emitted token was an accepted proposal
+            for j in range(1, n[b]):
+                assert draft[b][j] == verify[b][j - 1]
+            # no EOS strictly inside the emitted run
+            assert 0 not in verify[b][:n[b] - 1]
+            if verify[b][n[b] - 1] == 0 or budget[b] == n[b]:
+                assert d[b]
+
+    inner()
+
+
+# -- spec engine ≡ plain fused engine (bit-equality) -----------------------
+
+def _streams(cfg, opts, params, reqs, *, paged=False, kv_dtype="bf16",
+             **kw):
+    eng = ServingEngine(cfg, opts, params, n_slots=2, max_seq=64, eos=-999,
+                        fused=True, tick_tokens=4, paged=paged, page_size=8,
+                        kv_dtype=kv_dtype, **kw)
+    for i, (p, m) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=p.copy(), max_tokens=m))
+    done = eng.run()
+    assert len(done) == len(reqs)
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+def _reqs(cfg, n=3):
+    rng = np.random.default_rng(7)
+    return [(rng.integers(0, cfg.vocab_size, int(rng.integers(5, 14)),
+                          dtype=np.int32), int(rng.integers(4, 11)))
+            for _ in range(n)]
+
+
+_REF_CACHE = {}
+
+
+def _reference(cfg, opts, params, reqs, paged, kv_dtype):
+    # quantized references use the per-token scale layout the speculative
+    # engines run on: bit-equality is a same-layout contract
+    gran = {"scale_granularity": "token"} if kv_dtype != "bf16" else {}
+    key = (paged, kv_dtype)
+    if key not in _REF_CACHE:
+        _REF_CACHE[key], _ = _streams(cfg, opts, params, reqs, paged=paged,
+                                      kv_dtype=kv_dtype, **gran)
+    return _REF_CACHE[key]
+
+
+@pytest.mark.parametrize("paged,kv_dtype,spec_k,draft_layers,draft_quant", [
+    (False, "bf16", 1, 1, None),
+    (False, "bf16", 2, 1, None),
+    (False, "bf16", 4, 2, None),
+    (False, "bf16", 8, 1, None),
+    (True, "bf16", 2, 1, None),
+    (True, "bf16", 4, 1, None),
+    (True, "int8", 2, 1, None),
+    (True, "int8", 8, 2, None),
+    (True, "int8", 4, 4, "int8"),       # full-depth weight-quantized draft
+])
+def test_spec_matches_reference(opts, paged, kv_dtype, spec_k, draft_layers,
+                                draft_quant):
+    """The speculative stream must be bit-identical to the plain fused
+    engine on the same layout — for every K, draft depth, cache layout and
+    pool dtype, including a full-depth fake-quantized-weight draft (high
+    acceptance, so the bonus/rollback edges all fire)."""
+    cfg, params = reduced_params(ARCH)
+    reqs = _reqs(cfg)
+    ref = _reference(cfg, opts, params, reqs, paged, kv_dtype)
+    got, eng = _streams(cfg, opts, params, reqs, paged=paged,
+                        kv_dtype=kv_dtype, spec_decode=True, spec_k=spec_k,
+                        draft_layers=draft_layers, draft_quant=draft_quant)
+    assert got == ref, \
+        f"spec stream diverged (K={spec_k}, draft={draft_layers})"
+    ph = eng.stats.phase_report()
+    if spec_k > 1:
+        assert eng.stats.spec_verify_passes > 0
+        assert ph["spec_accept_per_pass"] >= 1.0
+        assert sum(ph["spec_accept_hist"][1:]) == eng.stats.spec_verify_passes
+    # histogram mass = tokens emitted by spec ticks = everything except the
+    # one token each request samples at prefill
+    n_spec = sum(len(v) for v in got.values()) - len(reqs)
+    assert sum(n * c for n, c in enumerate(ph.get("spec_accept_hist",
+                                                  []))) == n_spec
+
+
+def test_spec_pool_accounting_clean(opts):
+    """Rejected draft rows must not leak pages: after a drain the pool is
+    back to empty, and a second submit round on the same engine still runs
+    (capacity was really returned, not just counted)."""
+    cfg, params = reduced_params(ARCH)
+    reqs = _reqs(cfg)
+    got, eng = _streams(cfg, opts, params, reqs, paged=True, kv_dtype="int8",
+                        spec_decode=True, spec_k=4, draft_layers=1)
+    assert eng.pool.pages_in_use == 0
+    for i, (p, m) in enumerate(reqs):
+        eng.submit(Request(uid=100 + i, prompt=p.copy(), max_tokens=m))
+    done = [r for r in eng.run() if r.uid >= 100]   # run() accumulates
+    assert len(done) == len(reqs)
+    assert {r.uid - 100: r.out_tokens for r in done} == got
+    assert eng.pool.pages_in_use == 0
+
+
+def test_spec_ctor_validation(opts):
+    cfg, params = reduced_params(ARCH)
+    with pytest.raises(ValueError, match="greedy"):
+        ServingEngine(cfg, opts, params, n_slots=2, max_seq=32, eos=-1,
+                      spec_decode=True, temperature=0.7)
+    with pytest.raises(ValueError, match="fused"):
+        ServingEngine(cfg, opts, params, n_slots=2, max_seq=32, eos=-1,
+                      spec_decode=True, fused=False)
+    with pytest.raises(ValueError, match="spec_k"):
+        ServingEngine(cfg, opts, params, n_slots=2, max_seq=32, eos=-1,
+                      spec_decode=True, spec_k=0)
+    with pytest.raises(ValueError, match="draft_layers"):
+        ServingEngine(cfg, opts, params, n_slots=2, max_seq=32, eos=-1,
+                      spec_decode=True, draft_layers=99)
+    # shared per-(page, head) scales cannot stay bit-equal under rollback
+    with pytest.raises(ValueError, match="scale_granularity"):
+        ServingEngine(cfg, opts, params, n_slots=2, max_seq=32, eos=-1,
+                      spec_decode=True, paged=True, page_size=8,
+                      kv_dtype="int8", scale_granularity="head")
+    # ... and granularity is a quantized-pool knob only
+    with pytest.raises(ValueError, match="quantized"):
+        ServingEngine(cfg, opts, params, n_slots=2, max_seq=32, eos=-1,
+                      scale_granularity="token")
+
+
+def test_spec_int8_defaults_to_token_granularity(opts):
+    cfg, params = reduced_params(ARCH)
+    eng = ServingEngine(cfg, opts, params, n_slots=2, max_seq=32, eos=-1,
+                        spec_decode=True, paged=True, page_size=8,
+                        kv_dtype="int8")
+    assert eng.scale_granularity == "token"
+    # token-granularity scale leaves carry the page_size axis
+    scale_ndims = {leaf.ndim for path, leaf in
+                   jax.tree_util.tree_leaves_with_path(eng.caches)
+                   if "scale" in str(path[-1])}
+    assert scale_ndims and all(n >= 3 for n in scale_ndims)
+    # a plain quantized engine keeps the compact per-(page, head) layout
+    eng2 = ServingEngine(cfg, opts, params, n_slots=2, max_seq=32, eos=-1,
+                         paged=True, page_size=8, kv_dtype="int8")
+    assert eng2.scale_granularity == "head"
+
+
+# -- live_bound: per-slot bound normalization ------------------------------
+
+def test_live_bound_forms():
+    assert live_bound(None, 64) == 64
+    assert live_bound(32, 64) == 32
+    assert live_bound((16, 48, 8), 64) == 48
+    assert live_bound([24], 64) == 24
+    assert live_bound((), 64) == 64
+
+
+# -- front-end stats snapshot ----------------------------------------------
+
+def test_stats_snapshot_flat_json(opts):
+    cfg, params = reduced_params(ARCH)
+    eng = ServingEngine(cfg, opts, params, n_slots=2, max_seq=64, eos=-999,
+                        fused=True, spec_decode=True, spec_k=2,
+                        draft_layers=1)
+    fe = AsyncFrontend([eng])
+    snap = fe.stats_snapshot()        # safe before start(): gauges read 0
+    assert json.loads(json.dumps(snap)) == snap
+    assert all(isinstance(v, float) for v in snap.values())
+    assert snap["replicas"] == 1.0
+    assert snap["replica0_depth"] == 0.0
+    assert "replica0_tick_ewma_s" in snap
