@@ -266,6 +266,10 @@ class FleetRequest:
     prompt: np.ndarray        # [ctx + tail] int32
     max_tokens: int           # action chunk length to decode
     deadline_s: float         # complete within t + deadline_s (SLO)
+    priority: str = "best_effort"   # scheduling class: control-loop
+    #                                 repeats are "realtime" (the robot is
+    #                                 waiting on its action chunk),
+    #                                 episode starts "best_effort"
 
 
 def fleet_trace(n_robots: int = 8,
@@ -295,10 +299,12 @@ def fleet_trace(n_robots: int = 8,
       (``ctx_median`` median, ``ctx_sigma`` log-stdev), clipped to
       ``[tail + 1, ctx_max]`` — a few robots carry much longer contexts
       than the median, the tail that makes admission policy matter.
-    - **Deadlines.** Control requests must complete within one control
-      period (produce the action chunk before the next observation);
-      episode requests get 10 periods (episode startup is not
-      latency-critical at the control rate).
+    - **Deadlines & classes.** Control requests must complete within one
+      control period (produce the action chunk before the next
+      observation) and carry the ``"realtime"`` priority class — the
+      SLO-aware scheduler admits them first and defends their deadline;
+      episode requests get 10 periods and stay ``"best_effort"``
+      (episode startup is not latency-critical at the control rate).
 
     Returns the trace sorted by arrival time (ties broken by robot id,
     then step — total order, so replay order is deterministic too). All
@@ -330,6 +336,7 @@ def fleet_trace(n_robots: int = 8,
                 kind="episode" if step == 0 else "control",
                 prompt=prompt,
                 max_tokens=action_tokens,
-                deadline_s=period if step else 10 * period))
+                deadline_s=period if step else 10 * period,
+                priority="realtime" if step else "best_effort"))
     trace.sort(key=lambda e: (e.t, e.robot, e.step))
     return trace

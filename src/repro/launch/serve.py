@@ -157,6 +157,24 @@ def main(argv=None):
     p.add_argument("--arrival-rate", type=float, default=4.0,
                    help="Poisson robot-arrival rate, robots/s (requires "
                         "--fleet)")
+    p.add_argument("--slo-hz", type=float, default=0.0,
+                   help="deadline-aware scheduling: target control "
+                        "frequency the engine's SLO controller defends — "
+                        "realtime requests admit first (EDF within class), "
+                        "decode depth and the best-effort prefill-chunk "
+                        "quota are derived from slack vs the per-tick EWMA "
+                        "wall time, and stalled best-effort prefill may be "
+                        "preempted (never realtime). 0 = static budget "
+                        "(requires --chunked-prefill)")
+    p.add_argument("--priority", default="best_effort",
+                   choices=["best_effort", "realtime"],
+                   help="scheduling class for synthetic (non-fleet) "
+                        "requests; fleet traces carry their own per-request "
+                        "classes (control steps are realtime)")
+    p.add_argument("--realtime-reserve", type=int, default=0,
+                   help="front-end admission slots per replica reserved "
+                        "for realtime traffic: best-effort admits against "
+                        "queue-limit minus this (requires --frontend)")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -182,19 +200,25 @@ def main(argv=None):
                              spec_k=args.spec_k,
                              draft_layers=args.draft_layers or None,
                              draft_quant=(None if args.draft_quant == "none"
-                                          else args.draft_quant))
+                                          else args.draft_quant),
+                             slo_hz=args.slo_hz)
 
     if args.frontend:
         return asyncio.run(_main_frontend(args, cfg, make_engine))
     eng = make_engine()
     rng = np.random.default_rng(0)
     t0 = time.time()
+    # synthetic requests all share --priority; a realtime batch gets one
+    # SLO period as its deadline when the controller is on
+    deadline = (1.0 / args.slo_hz
+                if args.slo_hz > 0 and args.priority == "realtime" else 0.0)
     for i in range(args.requests):
         eng.submit(Request(
             uid=i,
             prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
                                 dtype=np.int32),
-            max_tokens=args.max_tokens))
+            max_tokens=args.max_tokens,
+            priority=args.priority, deadline_s=deadline))
     done = eng.run()
     wall = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
@@ -216,6 +240,15 @@ def main(argv=None):
               f"skipped={st.prefill_skipped} "
               f"ttft_mean={np.mean(st.ttft_s):.3f}s "
               f"decode_tick_p99={ph.get('decode_tick_p99', 0.0):.4f}s")
+    if args.slo_hz > 0:
+        att = {k[len("deadline_attainment_"):]: v for k, v in ph.items()
+               if k.startswith("deadline_attainment_")}
+        pre = {k[len("preemptions_"):]: v for k, v in ph.items()
+               if k.startswith("preemptions_")}
+        print(f"[serve] SLO controller: target={args.slo_hz} Hz "
+              f"tick_ewma={ph.get('tick_ewma_s', 0.0):.4f}s "
+              f"attainment={att or '(no deadlined requests)'} "
+              f"preemptions={pre or '{}'}")
     if args.paged:
         print(f"[serve] paged KV: page_size={args.page_size} "
               f"kv_dtype={args.kv_dtype} "
@@ -243,7 +276,8 @@ async def _main_frontend(args, cfg, make_engine):
     synthetic batch or a real-time fleet-trace replay (--fleet)."""
     engines = [make_engine() for _ in range(args.replicas)]
     async with AsyncFrontend(engines, queue_limit=args.queue_limit,
-                             offload_ticks=not args.inline_ticks) as fe:
+                             offload_ticks=not args.inline_ticks,
+                             realtime_reserve=args.realtime_reserve) as fe:
         t0 = time.time()
         if args.fleet:
             # prompt (ctx + 4-token tail) + generated actions must fit the
@@ -262,18 +296,26 @@ async def _main_frontend(args, cfg, make_engine):
                 if delay > 0:
                     await asyncio.sleep(delay)
                 try:
-                    served.append((e, await fe.submit(e.prompt,
-                                                      e.max_tokens)))
+                    served.append((e, await fe.submit(
+                        e.prompt, e.max_tokens, priority=e.priority,
+                        deadline_s=e.deadline_s)))
                 except Backpressure as exc:
                     # a control step re-sent after its period is stale:
-                    # drop it, back off for the front-end's estimate
-                    await asyncio.sleep(min(exc.retry_after_s, 0.05))
+                    # drop it, back off for the retry-after estimate —
+                    # driven by the replica's measured per-tick EWMA, so
+                    # the backoff tightens as ticks speed up instead of
+                    # sitting on a fixed cap
+                    await asyncio.sleep(exc.retry_after_s)
             streams = [s for _, s in served]
         else:
             rng = np.random.default_rng(0)
+            deadline = (1.0 / args.slo_hz
+                        if args.slo_hz > 0 and args.priority == "realtime"
+                        else 0.0)
             streams = [await fe.submit(
                 rng.integers(0, cfg.vocab_size, args.prompt_len,
-                             dtype=np.int32), args.max_tokens)
+                             dtype=np.int32), args.max_tokens,
+                priority=args.priority, deadline_s=deadline)
                 for _ in range(args.requests)]
         for s in streams:
             await s.tokens()
@@ -298,6 +340,11 @@ async def _main_frontend(args, cfg, make_engine):
                        for e, s in ctrl)
         print(f"[serve] fleet SLO: {met}/{len(served)} in deadline "
               f"(control {ctrl_met}/{len(ctrl)} at {args.control_hz} Hz)")
+        if args.slo_hz > 0:
+            snap = fe.stats_snapshot()
+            att = {k: v for k, v in snap.items()
+                   if "deadline_attainment" in k or "preemptions" in k}
+            print(f"[serve] SLO controller ({args.slo_hz} Hz): {att}")
     for i, eng in enumerate(engines):
         st = eng.stats
         print(f"  replica {i}: decode_tokens={st.tokens_decoded} "

@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import math
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -91,7 +92,10 @@ from repro.models.stacks import (cache_batch_axis, is_paged_leaf,
                                  is_scale_leaf, stack_plan)
 from repro.serving import sampler as S
 from repro.serving.kv_pool import KVPool, PoolExhausted
-from repro.serving.scheduler import ChunkedScheduler, ChunkPlan, PrefillTask
+from repro.serving.scheduler import (BEST_EFFORT, ChunkedScheduler, ChunkPlan,
+                                     PrefillTask, SLOController,
+                                     eviction_victims, insert_by_class,
+                                     is_realtime, req_deadline)
 
 
 @dataclass
@@ -111,6 +115,13 @@ class Request:
     pages_used: int = 0                # paged engine: pages held at finish
     pages_shared: int = 0              # paged engine: prefix-cache hits
     prefill_skipped: int = 0           # prompt positions skipped (prefix hit)
+    priority: str = BEST_EFFORT        # scheduling class ("realtime" jumps
+    #                                    the queue, EDF within class)
+    deadline_s: float = 0.0            # relative SLO (0 = none); the
+    #                                    absolute deadline is stamped at
+    #                                    submit time
+    t_deadline: float = math.inf       # t_submit + deadline_s (set by
+    #                                    ServingEngine.submit; inf = none)
 
 
 @dataclass
@@ -184,6 +195,36 @@ class EngineStats:
     spec_accept_hist: List[int] = field(default_factory=list)
     spec_key_lanes: int = 0              # verify rows x per-slot band bound
     spec_key_lanes_full: int = 0         # verify rows x max_seq
+    # deadline + preemption accounting (SLO-aware scheduling). Only
+    # requests carrying a deadline (deadline_s > 0) count toward
+    # attainment — an undeadlined request can neither hit nor miss.
+    # Preemptions are keyed by the *victim's* class; the policy invariant
+    # (realtime is never an admission-side victim) makes
+    # preemptions["realtime"] > 0 on that path a bug, not a statistic.
+    deadline_hit: Dict[str, int] = field(default_factory=dict)
+    deadline_miss: Dict[str, int] = field(default_factory=dict)
+    preemptions: Dict[str, int] = field(default_factory=dict)
+    tick_ewma_s: float = 0.0    # EWMA whole-tick wall (alpha 0.2) — the
+    #                             live tick-cost estimate the SLO
+    #                             controller and Backpressure quote from
+
+    def record_tick_wall(self, wall_s: float):
+        """Fold one tick's wall time into the EWMA (first sample seeds)."""
+        self.tick_ewma_s = (wall_s if self.tick_ewma_s == 0.0
+                            else 0.8 * self.tick_ewma_s + 0.2 * wall_s)
+
+    def record_deadline(self, req) -> None:
+        """Score a finishing request against its absolute deadline."""
+        if not (req.deadline_s > 0):
+            return
+        cls = req.priority
+        bucket = (self.deadline_hit if req.t_done <= req.t_deadline
+                  else self.deadline_miss)
+        bucket[cls] = bucket.get(cls, 0) + 1
+
+    def record_preemption(self, req) -> None:
+        self.preemptions[req.priority] = \
+            self.preemptions.get(req.priority, 0) + 1
 
     def phase_report(self) -> Dict[str, float]:
         """Figure-2-style wall-time decomposition, plus decode-tick latency
@@ -212,6 +253,18 @@ class EngineStats:
         if self.prefill_key_lanes_full:
             rep["prefill_key_lane_ratio"] = (self.prefill_key_lanes
                                              / self.prefill_key_lanes_full)
+        # per-class deadline attainment (requests with deadline_s > 0
+        # only) and preemption counts, keyed by class suffix — the SLO
+        # scheduler's scoreboard and the `slo` bench gate's input
+        for cls in sorted(set(self.deadline_hit) | set(self.deadline_miss)):
+            hit = self.deadline_hit.get(cls, 0)
+            miss = self.deadline_miss.get(cls, 0)
+            rep[f"deadline_attainment_{cls}"] = hit / (hit + miss)
+            rep[f"deadline_total_{cls}"] = float(hit + miss)
+        for cls, n in sorted(self.preemptions.items()):
+            rep[f"preemptions_{cls}"] = float(n)
+        if self.tick_ewma_s:
+            rep["tick_ewma_s"] = float(self.tick_ewma_s)
         if self.spec_verify_passes:
             emitted = sum(n * c for n, c in enumerate(self.spec_accept_hist))
             rep["spec_verify_passes"] = float(self.spec_verify_passes)
@@ -499,9 +552,17 @@ class ServingEngine:
                  spec_decode: bool = False, spec_k: int = 4,
                  draft_layers: Optional[int] = None,
                  draft_quant: Optional[str] = None,
-                 scale_granularity: Optional[str] = None):
+                 scale_granularity: Optional[str] = None,
+                 slo_hz: float = 0.0):
         if tick_tokens < 1:
             raise ValueError(f"tick_tokens must be >= 1, got {tick_tokens}")
+        if slo_hz < 0:
+            raise ValueError(f"slo_hz must be >= 0, got {slo_hz}")
+        if slo_hz > 0 and not chunked_prefill:
+            raise ValueError("slo_hz requires chunked_prefill=True: the SLO "
+                             "controller steers the per-tick decode depth "
+                             "and chunk quota, which only exist under the "
+                             "token-budget scheduler")
         if kv_quant.quant_dtype(kv_dtype) is not None and not paged:
             raise ValueError("kv_dtype quantization requires paged=True "
                              "(the page pool is the quantization boundary)")
@@ -650,6 +711,8 @@ class ServingEngine:
         # slot -> last time it made progress (chunk ran / tokens emitted);
         # the pool-aware admission policy evicts the longest-idle slot
         self._last_active = np.zeros(n_slots, np.float64)
+        self.slo_hz = slo_hz
+        self._slo = SLOController(slo_hz) if slo_hz > 0 else None
         if chunked_prefill:
             self.scheduler = ChunkedScheduler(chunk_size, token_budget)
             self._prefill_chunk = _jit_prefill_chunk(cfg, opts, paged)
@@ -689,10 +752,17 @@ class ServingEngine:
     # -- queue -----------------------------------------------------------
     def submit(self, req: Request):
         req.t_submit = time.perf_counter()
+        # the relative SLO becomes absolute at submit: everything
+        # downstream (EDF ordering, the SLO controller, attainment
+        # scoring) compares wall clock against this one stamp
+        req.t_deadline = (req.t_submit + req.deadline_s
+                          if req.deadline_s > 0 else math.inf)
         if self.scheduler is not None:
             self.scheduler.submit(req)
         else:
-            self.queue.append(req)
+            # legacy queue shares the class-ordered insert, so realtime
+            # requests get admission priority in _admit too
+            insert_by_class(self.queue, req)
 
     @property
     def pending(self) -> int:
@@ -790,6 +860,14 @@ class ServingEngine:
                 pt[s, :] = 0
         return jnp.asarray(pt)
 
+    def _slot_req(self, s: int) -> Optional[Request]:
+        """The request occupying slot ``s`` — decoding or mid-prefill."""
+        if self.slots[s] is not None:
+            return self.slots[s]
+        if self.scheduler is not None and s in self.scheduler.tasks:
+            return self.scheduler.tasks[s].req
+        return None
+
     def _preempt_slot(self, s: int):
         """Evict a live slot under pool pressure: free its pages and requeue
         the request from scratch. Works on both a decoding slot and a
@@ -805,12 +883,15 @@ class ServingEngine:
             req = self.slots[s]
             self.slots[s] = None
             req.out_tokens = []
+            self.stats.record_preemption(req)
             if self.scheduler is not None:
                 self.scheduler.submit(req, front=True)
             else:
-                self.queue.insert(0, req)
+                insert_by_class(self.queue, req, front=True)
         elif self.scheduler is not None:
-            self.scheduler.requeue_task(s)
+            task = self.scheduler.requeue_task(s)
+            if task is not None:
+                self.stats.record_preemption(task.req)
 
     def _evict_longest_idle(self, exclude: int = -1) -> bool:
         """Pool-aware admission policy: instead of blindly deferring on
@@ -819,11 +900,14 @@ class ServingEngine:
         are candidates: decoders and progressing prefills free their pages
         by finishing, so evicting them would trade guaranteed progress for
         a restart (and two mutually-starved slots could ping-pong-evict
-        each other forever). Returns whether a victim was evicted."""
+        each other forever). Candidates are additionally class-filtered
+        (``scheduler.eviction_victims``): realtime prefill is never a
+        victim — realtime never preempts realtime, and best-effort
+        preempting realtime would be priority inversion. Returns whether
+        a victim was evicted."""
         if self.scheduler is None:
             return False
-        cands = [s for s, t in self.scheduler.tasks.items()
-                 if s != exclude and t.stalled]
+        cands = eviction_victims(self.scheduler.tasks, exclude=exclude)
         if not cands:
             return False
         self._preempt_slot(min(cands, key=lambda s: self._last_active[s]))
@@ -877,8 +961,16 @@ class ServingEngine:
                         raise PoolExhausted(
                             f"KV pool too small for a single request "
                             f"(slot {s} needs pages for {end} positions)")
+                    # class preference: best-effort work yields first;
+                    # realtime is only ever preempted here when nothing
+                    # else can free pages (the no-deadlock fallback —
+                    # decode growth must make progress or the pool is
+                    # simply too small for the realtime working set)
+                    be = [v for v in victims
+                          if not is_realtime(self._slot_req(v))]
                     self._preempt_slot(max(
-                        victims, key=lambda v: len(self.pool.slot_pages[v])))
+                        be or victims,
+                        key=lambda v: len(self.pool.slot_pages[v])))
             self.slots[s].pages_used = len(self.pool.slot_pages[s])
         # pages a slot gained this call (growth and COW destinations;
         # diffed against entry so pages appended by an ensure() that
@@ -923,6 +1015,7 @@ class ServingEngine:
         req = self.slots[s]
         req.done = True
         req.t_done = now
+        self.stats.record_deadline(req)
         if self.paged:
             req.pages_used = len(self.pool.slot_pages[s])
             self.pool.free_slot(s)
@@ -1007,6 +1100,7 @@ class ServingEngine:
                 if tok == self.eos or req.max_tokens <= 1 or budget <= 0:
                     req.done = True
                     req.t_done = req.t_prefill
+                    self.stats.record_deadline(req)
                     self.finished.append(req)
                     continue
                 if self.paged:
@@ -1061,7 +1155,9 @@ class ServingEngine:
                 self.stats.prefill_tokens - pf0)
             self.stats.tick_key_lanes.append(
                 self.stats.prefill_key_lanes - kl0)
-            self.stats.tick_s.append(time.perf_counter() - t_tick)
+            wall = time.perf_counter() - t_tick
+            self.stats.tick_s.append(wall)
+            self.stats.record_tick_wall(wall)
             return 0
         pt = None
         if self.paged:
@@ -1097,7 +1193,9 @@ class ServingEngine:
             self.stats.prefill_tokens - pf0)
         self.stats.tick_key_lanes.append(
             self.stats.prefill_key_lanes - kl0)
-        self.stats.tick_s.append(time.perf_counter() - t_tick)
+        wall = time.perf_counter() - t_tick
+        self.stats.tick_s.append(wall)
+        self.stats.record_tick_wall(wall)
         return len(active)
 
     def step_fused(self) -> int:
@@ -1115,7 +1213,9 @@ class ServingEngine:
             self.stats.prefill_tokens - pf0)
         self.stats.tick_key_lanes.append(
             self.stats.prefill_key_lanes - kl0)
-        self.stats.tick_s.append(time.perf_counter() - t_tick)
+        wall = time.perf_counter() - t_tick
+        self.stats.tick_s.append(wall)
+        self.stats.record_tick_wall(wall)
         return emitted
 
     def _decode_tick(self, max_steps: int) -> int:
@@ -1466,6 +1566,7 @@ class ServingEngine:
         if tok == self.eos or req.max_tokens <= 1 or budget <= 0:
             req.done = True
             req.t_done = now
+            self.stats.record_deadline(req)
             if self.paged:
                 req.pages_used = len(self.pool.slot_pages[s])
                 self.pool.free_slot(s)
@@ -1521,7 +1622,21 @@ class ServingEngine:
         sched = self.scheduler
         self._admit_chunked()
         n_active = sum(r is not None for r in self.slots)
-        plan = sched.plan_tick(n_active, self.tick_tokens)
+        slo = None
+        if self._slo is not None:
+            # the deadline check: remaining work + slack per realtime
+            # decoding slot, plus whether realtime prefill is still in the
+            # pipe, against the measured tick EWMA (see SLOController)
+            rt_decode = [(int(self.budget[s]), req_deadline(self.slots[s]))
+                         for s in range(self.n_slots)
+                         if self.slots[s] is not None
+                         and is_realtime(self.slots[s])]
+            rt_prefill = (any(is_realtime(t.req)
+                              for t in sched.tasks.values())
+                          or any(is_realtime(r) for r in sched.waiting))
+            slo = self._slo.plan(t_tick, self.stats.tick_ewma_s,
+                                 rt_decode, rt_prefill)
+        plan = sched.plan_tick(n_active, self.tick_tokens, slo=slo)
         for cp in plan.chunks:
             if sched.tasks.get(cp.task.slot) is not cp.task:
                 continue    # finished or preempted earlier this tick
@@ -1537,7 +1652,9 @@ class ServingEngine:
             self.stats.prefill_tokens - pf0)
         self.stats.tick_key_lanes.append(
             self.stats.prefill_key_lanes - kl0)
-        self.stats.tick_s.append(time.perf_counter() - t_tick)
+        wall = time.perf_counter() - t_tick
+        self.stats.tick_s.append(wall)
+        self.stats.record_tick_wall(wall)
         return emitted
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:

@@ -67,23 +67,33 @@ from typing import Deque, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.serving.engine import Request, ServingEngine, prefix_page_keys
+from repro.serving.scheduler import BEST_EFFORT, REALTIME
 
 
 class Backpressure(RuntimeError):
-    """Every routable replica's admission queue is at ``queue_limit``.
+    """Every replica routable *for this request's class* is at its
+    admission limit.
 
     Carries ``retry_after_s`` — the least-loaded replica's queue depth x
-    its EWMA tick wall time, i.e. a first-order estimate of when a slot's
-    worth of queue will have drained. Clients (and the workload replayer)
-    are expected to back off for that long and resubmit."""
+    its EWMA tick wall time (the engine's own measurement once it has
+    ticked, the front-end's driver-side estimate before that), i.e. a
+    first-order estimate of when a slot's worth of queue will have
+    drained. Clients (and the workload replayer) are expected to back off
+    for that long and resubmit. ``priority`` echoes the rejected class:
+    with a ``realtime_reserve`` configured, best-effort traffic hits its
+    (lower) limit first, so a flood of best-effort rejects while realtime
+    still admits is the system working as designed."""
 
-    def __init__(self, retry_after_s: float, depth: int, limit: int):
+    def __init__(self, retry_after_s: float, depth: int, limit: int,
+                 priority: str = BEST_EFFORT):
         super().__init__(
-            f"admission queues full (depth {depth} >= limit {limit} on "
-            f"every replica); retry after {retry_after_s:.3f}s")
+            f"admission queues full (depth {depth} >= limit {limit} for "
+            f"{priority} on every replica); retry after "
+            f"{retry_after_s:.3f}s")
         self.retry_after_s = retry_after_s
         self.depth = depth
         self.limit = limit
+        self.priority = priority
 
 
 _DONE = object()        # stream sentinel: request finished or was cancelled
@@ -181,6 +191,13 @@ class AsyncFrontend:
         during a tick. ``False`` ticks inline on the loop — fully
         single-threaded and deterministic, the mode the bit-equality bench
         uses.
+    realtime_reserve: admission slots per replica held back for the
+        ``realtime`` class: best-effort requests admit against
+        ``queue_limit - realtime_reserve`` while realtime admits against
+        the full ``queue_limit``, so a flood of best-effort traffic can
+        fill its share and start bouncing without ever crowding a control
+        loop out of admission. 0 (default) disables the split — both
+        classes see one limit, the pre-priority behavior.
 
     Use as an async context manager (``async with AsyncFrontend(...)``),
     or call ``start()`` / ``stop()`` explicitly. ``stop()`` cancels the
@@ -188,13 +205,19 @@ class AsyncFrontend:
     work."""
 
     def __init__(self, engines: Sequence[ServingEngine],
-                 queue_limit: int = 64, offload_ticks: bool = True):
+                 queue_limit: int = 64, offload_ticks: bool = True,
+                 realtime_reserve: int = 0):
         if not engines:
             raise ValueError("AsyncFrontend needs at least one engine")
         if queue_limit < 1:
             raise ValueError(f"queue_limit must be >= 1, got {queue_limit}")
+        if not 0 <= realtime_reserve < queue_limit:
+            raise ValueError(
+                f"realtime_reserve must be in [0, queue_limit), got "
+                f"{realtime_reserve} with queue_limit {queue_limit}")
         self.engines = list(engines)
         self.queue_limit = queue_limit
+        self.realtime_reserve = realtime_reserve
         self.offload_ticks = offload_ticks
         self.stats = FrontendStats()
         n = len(self.engines)
@@ -265,9 +288,13 @@ class AsyncFrontend:
         ``frontend_`` prefix, ``replicas``, and per-replica gauges
         ``replica{i}_depth`` (staged + engine-pending), ``replica{i}_pending``
         (engine-side only), ``replica{i}_tick_ewma_s`` (EWMA tick wall time —
-        with depth, the retry-after estimate Backpressure quotes), and
-        ``replica{i}_tokens_decoded``; speculative replicas additionally
-        report ``replica{i}_spec_accept_per_pass``. All values are floats,
+        engine-measured once it has ticked; with depth, the retry-after
+        estimate Backpressure quotes), and ``replica{i}_tokens_decoded``;
+        speculative replicas additionally report
+        ``replica{i}_spec_accept_per_pass``, and replicas that scored any
+        deadlined request report the per-class SLO scoreboard
+        (``replica{i}_deadline_attainment_realtime`` / ``_best_effort``
+        and ``replica{i}_preemptions_*`` counters). All values are floats,
         the snapshot is safe to take before ``start()`` (gauges read zero),
         and nothing here blocks on a tick."""
         snap: Dict[str, float] = {}
@@ -277,13 +304,15 @@ class AsyncFrontend:
         for i, eng in enumerate(self.engines):
             snap[f"replica{i}_depth"] = float(self.depth(i))
             snap[f"replica{i}_pending"] = float(eng.pending)
-            snap[f"replica{i}_tick_ewma_s"] = float(self._tick_ewma[i])
+            snap[f"replica{i}_tick_ewma_s"] = float(self.tick_ewma(i))
             snap[f"replica{i}_tokens_decoded"] = float(
                 eng.stats.tokens_decoded)
             ph = eng.stats.phase_report()
-            if "spec_accept_per_pass" in ph:
-                snap[f"replica{i}_spec_accept_per_pass"] = float(
-                    ph["spec_accept_per_pass"])
+            for k, v in ph.items():
+                if k.startswith(("deadline_attainment_", "deadline_total_",
+                                 "preemptions_")) \
+                        or k == "spec_accept_per_pass":
+                    snap[f"replica{i}_{k}"] = float(v)
         return snap
 
     # -- admission ---------------------------------------------------------
@@ -291,24 +320,42 @@ class AsyncFrontend:
         """Replica ``i``'s admission depth: staged + engine-pending."""
         return len(self._staged[i]) + self.engines[i].pending
 
-    def _route(self, prompt: np.ndarray,
-               patches: Optional[np.ndarray]) -> int:
+    def class_limit(self, priority: str) -> int:
+        """Admission limit the class admits against: realtime sees the
+        full ``queue_limit``, best-effort yields ``realtime_reserve``
+        slots of it."""
+        if priority == REALTIME:
+            return self.queue_limit
+        return self.queue_limit - self.realtime_reserve
+
+    def tick_ewma(self, i: int) -> float:
+        """Replica ``i``'s per-tick wall-time estimate: the engine's own
+        EWMA once it has ticked (it sees every tick, including those
+        driven outside this front-end), the driver-side estimate before
+        that."""
+        eng_ewma = self.engines[i].stats.tick_ewma_s
+        return eng_ewma if eng_ewma > 0 else self._tick_ewma[i]
+
+    def _route(self, prompt: np.ndarray, patches: Optional[np.ndarray],
+               priority: str = BEST_EFFORT) -> int:
         """Pick a replica: longest prefix-page match first, least-loaded
         fallback. Raises :class:`Backpressure` when everything is full.
 
         The digest is computed per distinct (model, page_size, kv_dtype)
         signature — identical replicas share one computation — and matched
         against each pool's live prefix cache. A match only wins while the
-        replica is under ``queue_limit``: affinity never overrides
-        admission control (a full replica's cache hit is worth less than
-        another replica's free slot, because the hit only skips prefill
-        while the queue costs whole requests)."""
+        replica is under the class's admission limit
+        (``class_limit(priority)``): affinity never overrides admission
+        control (a full replica's cache hit is worth less than another
+        replica's free slot, because the hit only skips prefill while the
+        queue costs whole requests)."""
+        limit = self.class_limit(priority)
         keys_cache: Dict[tuple, List[bytes]] = {}
         best, best_hits = -1, 0
         for i, eng in enumerate(self.engines):
             if eng.pool is None or not eng.prefix_cache:
                 continue
-            if self.depth(i) >= self.queue_limit:
+            if self.depth(i) >= limit:
                 continue
             n_prefix = (eng.cfg.vision.num_tokens
                         if patches is not None and eng.cfg.vision is not None
@@ -325,26 +372,34 @@ class AsyncFrontend:
             self.stats.routed_prefix += 1
             return best
         cands = [i for i in range(len(self.engines))
-                 if self.depth(i) < self.queue_limit]
+                 if self.depth(i) < limit]
         if not cands:
             i = min(range(len(self.engines)), key=self.depth)
-            retry = max(1e-3, self.depth(i) * self._tick_ewma[i])
+            retry = max(1e-3, self.depth(i) * self.tick_ewma(i))
             self.stats.rejected += 1
-            raise Backpressure(retry, self.depth(i), self.queue_limit)
+            raise Backpressure(retry, self.depth(i), limit, priority)
         self.stats.routed_load += 1
         return min(cands, key=self.depth)
 
     async def submit(self, prompt: np.ndarray, max_tokens: int,
-                     patches: Optional[np.ndarray] = None) -> TokenStream:
+                     patches: Optional[np.ndarray] = None,
+                     priority: str = BEST_EFFORT,
+                     deadline_s: float = 0.0) -> TokenStream:
         """Admit one request: route it, stage it with the chosen replica's
         driver, and return its :class:`TokenStream`. Raises
-        :class:`Backpressure` instead of queueing past ``queue_limit``."""
+        :class:`Backpressure` instead of queueing past the class's
+        admission limit. ``priority``/``deadline_s`` ride the engine
+        :class:`Request` into the scheduler: realtime requests admit
+        against the full ``queue_limit``, jump the replica's waiting
+        queue (EDF within class), and have their deadline defended by the
+        engine's SLO controller when it runs one (``slo_hz > 0``)."""
         if not self._running:
             raise RuntimeError("AsyncFrontend not started")
-        i = self._route(prompt, patches)
+        i = self._route(prompt, patches, priority)
         uid, self._uid = self._uid, self._uid + 1
         req = Request(uid=uid, prompt=np.asarray(prompt, np.int32),
-                      max_tokens=max_tokens, patches=patches)
+                      max_tokens=max_tokens, patches=patches,
+                      priority=priority, deadline_s=deadline_s)
         stream = TokenStream(uid, req, i)
         stream._frontend = self
         self._staged[i].append(stream)

@@ -198,6 +198,62 @@ def test_frontend_over_limit_rejects_without_deadlock(opts):
     assert all(len(o) == 6 for o in outs), "accepted requests must finish"
 
 
+def test_backpressure_retry_tracks_tick_ewma(opts):
+    """The retry-after estimate is driven by the engine's measured per-tick
+    EWMA, not a fixed cap: when ticks speed up, the estimate tightens
+    proportionally. Set the EWMA directly for determinism (the routing
+    math is synchronous, no driver needed)."""
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(8)
+    eng = _paged_chunked(cfg, opts, params)
+    for uid in range(2):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size, 12,
+                                               dtype=np.int32),
+                           max_tokens=4))
+    fe = AsyncFrontend([eng], queue_limit=2)
+    prompt = rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+    eng.stats.tick_ewma_s = 0.5
+    with pytest.raises(Backpressure) as slow:
+        fe._route(prompt, None)
+    eng.stats.tick_ewma_s = 0.05            # ticks sped up 10x
+    with pytest.raises(Backpressure) as fast:
+        fe._route(prompt, None)
+    assert slow.value.retry_after_s == pytest.approx(2 * 0.5)
+    assert fast.value.retry_after_s == pytest.approx(2 * 0.05)
+    assert fast.value.retry_after_s < slow.value.retry_after_s
+    # before the engine has ever ticked, the driver-side estimate holds
+    eng.stats.tick_ewma_s = 0.0
+    with pytest.raises(Backpressure) as cold:
+        fe._route(prompt, None)
+    assert cold.value.retry_after_s == \
+        pytest.approx(max(1e-3, 2 * fe._tick_ewma[0]))
+
+
+def test_realtime_reserve_class_admission(opts):
+    """With a realtime_reserve, best-effort admits against the reduced
+    limit (and its Backpressure names the class) while realtime still
+    sees the full queue_limit."""
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(9)
+    eng = _paged_chunked(cfg, opts, params)
+    fe = AsyncFrontend([eng], queue_limit=3, realtime_reserve=1)
+    assert fe.class_limit("realtime") == 3
+    assert fe.class_limit("best_effort") == 2
+    for uid in range(2):                    # fill the best-effort share
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size, 12,
+                                               dtype=np.int32),
+                           max_tokens=4))
+    prompt = rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+    with pytest.raises(Backpressure) as exc:
+        fe._route(prompt, None)
+    assert exc.value.priority == "best_effort"
+    assert fe._route(prompt, None, priority="realtime") == 0
+    with pytest.raises(ValueError, match="realtime_reserve"):
+        AsyncFrontend([eng], queue_limit=2, realtime_reserve=2)
+
+
 # ---------------------------------------------------------------------------
 # fleet trace generator
 # ---------------------------------------------------------------------------
@@ -232,11 +288,13 @@ def test_fleet_trace_structure():
     for events in by_robot.values():
         events.sort(key=lambda e: e.step)
         assert events[0].kind == "episode"
+        assert events[0].priority == "best_effort"
         assert events[0].deadline_s == pytest.approx(10 / hz)
         ctx = events[0].prompt[:-tail]
         assert len(ctx) >= tail + 1
         for e in events[1:]:
             assert e.kind == "control"
+            assert e.priority == "realtime"
             assert e.deadline_s == pytest.approx(1 / hz)
             # repeats share the robot's full context prefix, fresh tail
             assert np.array_equal(e.prompt[:-tail], ctx)

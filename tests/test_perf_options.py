@@ -11,6 +11,7 @@ from repro.models.layers import ModelOptions
 from conftest import reduced_params
 
 
+@pytest.mark.slow
 def test_window_cache_ring_matches_full():
     """Ring-buffer KV cache (window_cache) decodes identically to a full
     cache, including past the ring-wrap boundary."""

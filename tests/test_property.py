@@ -125,6 +125,74 @@ def test_chunked_stream_bit_identical_random_chunks(chunk, paged, lens):
     check_chunk_invariance(chunk, paged, lens)
 
 
+@given(chunk_size=st.integers(1, 32), token_budget=st.integers(1, 128),
+       n_active=st.integers(0, 8), tick_tokens=st.integers(1, 16),
+       totals=st.lists(st.integers(1, 300), min_size=0, max_size=4))
+@settings(max_examples=100, deadline=None)
+def test_scheduler_budget_conservation(chunk_size, token_budget, n_active,
+                                       tick_tokens, totals):
+    """plan_tick never over-plans: chunks fit the post-reservation budget,
+    the whole tick fits token_budget whenever >= 1 token/slot exists, and
+    every chunk is well-formed. Body in test_scheduler (hypothesis-free)."""
+    from test_scheduler import check_budget_conservation
+    check_budget_conservation(chunk_size, token_budget, n_active,
+                              tick_tokens, totals)
+
+
+@given(token_budget=st.integers(1, 64), n_active=st.integers(0, 12),
+       tick_tokens=st.integers(1, 16))
+@settings(max_examples=60, deadline=None)
+def test_scheduler_decode_floor(token_budget, n_active, tick_tokens):
+    from test_scheduler import check_decode_floor
+    check_decode_floor(token_budget, n_active, tick_tokens)
+
+
+@given(specs=st.lists(st.tuples(st.booleans(),
+                                st.integers(0, 5).map(float),
+                                st.booleans()),
+                      min_size=0, max_size=12))
+@settings(max_examples=100, deadline=None)
+def test_scheduler_class_queue_order(specs):
+    """insert_by_class: realtime EDF segment strictly ahead of best-effort,
+    FCFS seniority within class for plain arrivals."""
+    from test_scheduler import check_insert_by_class
+    check_insert_by_class(specs)
+
+
+@given(fronts=st.lists(st.booleans(), min_size=0, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_scheduler_all_best_effort_degeneracy(fronts):
+    """No realtime anywhere => class insertion is bit-identical to the
+    static append/insert(0) policy."""
+    from test_scheduler import check_all_best_effort_degeneracy
+    check_all_best_effort_degeneracy(fronts)
+
+
+@given(specs=st.lists(st.tuples(st.booleans(), st.booleans()),
+                      min_size=0, max_size=8),
+       exclude=st.integers(-1, 7))
+@settings(max_examples=80, deadline=None)
+def test_scheduler_eviction_never_selects_realtime(specs, exclude):
+    from test_scheduler import check_eviction_victim_class
+    check_eviction_victim_class(specs, exclude)
+
+
+@given(token_budget=st.integers(1, 96), chunk_size=st.integers(1, 32),
+       rt_total=st.integers(1, 200), be_total=st.integers(1, 200),
+       quota=st.integers(0, 64), need=st.integers(0, 16),
+       n_active=st.integers(0, 6), tick_tokens=st.integers(1, 12))
+@settings(max_examples=100, deadline=None)
+def test_scheduler_slo_quota_and_boost(token_budget, chunk_size, rt_total,
+                                       be_total, quota, need, n_active,
+                                       tick_tokens):
+    """SLO tick semantics: quota caps best-effort chunks only, decode_need
+    deepens the reservation up to tick_tokens, and a default SLOTick plans
+    bit-identically to slo=None."""
+    from test_scheduler import check_slo_quota_and_boost
+    check_slo_quota_and_boost(token_budget, chunk_size, rt_total, be_total,
+                              quota, need, n_active, tick_tokens)
+
+
 @given(st.integers(2, 6), st.integers(1, 3))
 @settings(max_examples=10, deadline=None)
 def test_moe_gate_weights_normalized(e, k):

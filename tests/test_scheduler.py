@@ -1,6 +1,10 @@
-"""Chunked-prefill scheduler: policy math (pure, no model), engine-level
+"""Chunked-prefill scheduler: policy math (pure, no model), scheduler
+invariants as hypothesis-ready property bodies (budget conservation, class
+ordering, decode floor, eviction-victim class safety), engine-level
 bit-equality against monolithic prefill, prefix-skip correctness, and the
 preempt/requeue interaction with in-flight chunks."""
+import math
+
 import numpy as np
 import pytest
 
@@ -10,7 +14,10 @@ import jax.numpy as jnp
 from repro.models import model as M
 from repro.models.layers import ModelOptions
 from repro.serving import Request, ServingEngine
-from repro.serving.scheduler import ChunkedScheduler, PrefillTask
+from repro.serving.scheduler import (BEST_EFFORT, REALTIME, ChunkedScheduler,
+                                     PrefillTask, SLOController, SLOTick,
+                                     eviction_victims, insert_by_class,
+                                     is_realtime, req_deadline)
 from conftest import reduced_params
 
 
@@ -108,6 +115,226 @@ def test_prefix_skip_starts_at_first_nonshared_token():
     assert t.pos == 48 and t.remaining == 16
     plan = sched.plan_tick(n_active=0, tick_tokens=8)
     assert plan.chunks[0].start == 48 and plan.chunks[0].n_tok == 16
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants: hypothesis-ready property bodies
+#
+# Each ``check_*`` body is a pure function of its drawn inputs, exercised
+# here by fixed-draw smokes (so the invariants stay covered without
+# hypothesis) and by the ``@given`` wrappers in test_property.py with
+# random draws. No model, no jax — plan_tick is host-side policy.
+# ---------------------------------------------------------------------------
+
+class _Req:
+    """Request double carrying only what the policy layer reads."""
+
+    def __init__(self, uid, priority=BEST_EFFORT, t_deadline=math.inf):
+        self.uid = uid
+        self.priority = priority
+        self.t_deadline = t_deadline
+
+    def __repr__(self):
+        return f"_Req({self.uid}, {self.priority}, {self.t_deadline})"
+
+
+def check_budget_conservation(chunk_size, token_budget, n_active,
+                              tick_tokens, totals):
+    """One tick never plans more work than the budget allows: chunks fit
+    in what the decode reservation leaves, and — whenever the budget can
+    cover one decode step per active slot — the whole tick fits inside
+    ``token_budget``. The only overdraw the policy permits is the >= 1
+    decode-step progress floor when ``token_budget < n_active``."""
+    sched = ChunkedScheduler(chunk_size=chunk_size, token_budget=token_budget)
+    for i, total in enumerate(totals):
+        sched.start_task(_task(slot=i, total=total))
+    plan = sched.plan_tick(n_active=n_active, tick_tokens=tick_tokens)
+    chunk_tok = sum(c.n_tok for c in plan.chunks)
+    assert chunk_tok <= max(0, token_budget - n_active * plan.decode_steps)
+    if n_active and token_budget >= n_active:
+        assert n_active * plan.decode_steps + chunk_tok <= token_budget
+    assert plan.budget_used == n_active * plan.decode_steps + chunk_tok
+    # chunks are well-formed: contiguous from each task's position, sized
+    # within chunk_size, never past the prompt end
+    pos = {}
+    for c in plan.chunks:
+        assert 1 <= c.n_tok <= chunk_size
+        assert c.start == pos.get(c.task.slot, c.task.pos)
+        pos[c.task.slot] = c.start + c.n_tok
+        assert pos[c.task.slot] <= c.task.total
+
+
+def check_decode_floor(token_budget, n_active, tick_tokens):
+    """Active decoders always advance: >= 1 step regardless of pressure,
+    <= tick_tokens regardless of slack (with no SLO boost in play)."""
+    sched = ChunkedScheduler(chunk_size=8, token_budget=token_budget)
+    plan = sched.plan_tick(n_active=n_active, tick_tokens=tick_tokens)
+    if n_active:
+        assert 1 <= plan.decode_steps <= tick_tokens
+    else:
+        assert plan.decode_steps == 0
+
+
+def check_insert_by_class(specs):
+    """Queue shape after arbitrary class-ordered inserts: one realtime
+    segment (deadlines non-decreasing) strictly ahead of the best-effort
+    segment, and FCFS seniority within each class for plain (front=False)
+    arrivals — equal-deadline realtime peers and all best-effort requests
+    keep arrival order. ``specs``: (is_rt, deadline, front) per arrival."""
+    queue = []
+    for i, (rt, dl, front) in enumerate(specs):
+        req = _Req(i, REALTIME if rt else BEST_EFFORT,
+                   float(dl) if rt else math.inf)
+        req.front = front
+        insert_by_class(queue, req, front=front)
+    k = 0
+    while k < len(queue) and is_realtime(queue[k]):
+        k += 1
+    assert all(not is_realtime(r) for r in queue[k:]), \
+        "a best-effort request sits inside the realtime segment"
+    dls = [req_deadline(r) for r in queue[:k]]
+    assert dls == sorted(dls), f"realtime segment not EDF: {dls}"
+    plain_rt = [r.uid for r in queue[:k] if not r.front]
+    by_dl = {}
+    for r in queue[:k]:
+        if not r.front:
+            by_dl.setdefault(req_deadline(r), []).append(r.uid)
+    for dl, uids in by_dl.items():
+        assert uids == sorted(uids), \
+            f"equal-deadline realtime arrivals reordered at dl={dl}: {uids}"
+    plain_be = [r.uid for r in queue[k:] if not r.front]
+    assert plain_be == sorted(plain_be), \
+        f"best-effort arrivals reordered: {plain_be}"
+    assert len(queue) == len(specs)
+    del plain_rt
+
+
+def check_all_best_effort_degeneracy(fronts):
+    """With no realtime requests anywhere, insert_by_class must be
+    *bit-identical* to the static policy: append, or insert(0) for
+    front=True. This is the anchor for the engine-level guarantee that
+    an all-best-effort workload schedules exactly as before the SLO
+    scheduler existed."""
+    queue, ref = [], []
+    for i, front in enumerate(fronts):
+        req = _Req(i)
+        insert_by_class(queue, req, front=front)
+        ref.insert(0, req) if front else ref.append(req)
+    assert queue == ref
+
+
+def check_eviction_victim_class(specs, exclude):
+    """Realtime is never an eviction victim, and every stalled best-effort
+    task (other than the protected slot) is offered — the policy may not
+    silently shrink the victim set either. ``specs``: (is_rt, stalled)."""
+    tasks = {}
+    for s, (rt, stalled) in enumerate(specs):
+        t = _task(slot=s, total=32)
+        t.req = _Req(s, REALTIME if rt else BEST_EFFORT)
+        t.stalled = stalled
+        tasks[s] = t
+    victims = eviction_victims(tasks, exclude=exclude)
+    assert set(victims) == {
+        s for s, t in tasks.items()
+        if s != exclude and t.stalled and not is_realtime(t.req)}
+    for s in victims:
+        assert not is_realtime(tasks[s].req)
+
+
+def check_slo_quota_and_boost(token_budget, chunk_size, rt_total, be_total,
+                              quota, need, n_active, tick_tokens):
+    """Under an SLO tick: best-effort chunk tokens never exceed the quota,
+    realtime chunks are never quota'd (only budget-bound), and the decode
+    reservation honours ``decode_need`` up to ``tick_tokens``. A default
+    SLOTick (no pressure) must plan bit-identically to slo=None."""
+    def build():
+        sched = ChunkedScheduler(chunk_size=chunk_size,
+                                 token_budget=token_budget)
+        t_rt = _task(slot=0, total=rt_total)
+        t_rt.req = _Req(0, REALTIME, t_deadline=1.0)
+        sched.start_task(t_rt)
+        t_be = _task(slot=1, total=be_total)
+        t_be.req = _Req(1)
+        sched.start_task(t_be)
+        return sched
+
+    plan = build().plan_tick(n_active, tick_tokens,
+                             slo=SLOTick(decode_need=need,
+                                         be_chunk_quota=quota))
+    be_tok = sum(c.n_tok for c in plan.chunks
+                 if not is_realtime(c.task.req))
+    rt_tok = sum(c.n_tok for c in plan.chunks if is_realtime(c.task.req))
+    assert be_tok <= quota
+    assert plan.decode_steps <= tick_tokens
+    if n_active:
+        base = max(1, min(tick_tokens, token_budget // n_active))
+        expect = min(tick_tokens, need) if need > base else base
+        assert plan.decode_steps == expect
+    reserved = n_active * plan.decode_steps
+    assert rt_tok + be_tok <= max(0, token_budget - reserved)
+    # realtime chunks saw the full leftover, not the best-effort quota
+    if quota == 0 and rt_total > 0 and token_budget - reserved > 0:
+        assert rt_tok > 0, "quota starved a realtime chunk"
+    # no-pressure SLO tick == static plan, field for field
+    a = build().plan_tick(n_active, tick_tokens)
+    b = build().plan_tick(n_active, tick_tokens, slo=SLOTick())
+    assert ([(c.task.slot, c.start, c.n_tok) for c in a.chunks],
+            a.decode_steps, a.budget_used) == \
+           ([(c.task.slot, c.start, c.n_tok) for c in b.chunks],
+            b.decode_steps, b.budget_used)
+
+
+def test_budget_conservation_fixed_draws():
+    check_budget_conservation(16, 48, 2, 8, [400, 37])
+    check_budget_conservation(8, 4, 6, 8, [100])       # floor overdraw
+    check_budget_conservation(32, 8, 0, 8, [100, 3, 17])
+
+
+def test_decode_floor_fixed_draws():
+    check_decode_floor(4, 6, 8)
+    check_decode_floor(64, 1, 4)
+    check_decode_floor(16, 0, 8)
+
+
+def test_insert_by_class_fixed_draws():
+    check_insert_by_class([(False, None, False), (True, 3.0, False),
+                           (True, 1.0, False), (False, None, True),
+                           (True, 3.0, False), (True, 2.0, True),
+                           (False, None, False)])
+    check_all_best_effort_degeneracy([False, True, False, False, True])
+
+
+def test_eviction_victim_class_fixed_draws():
+    check_eviction_victim_class([(True, True), (False, True),
+                                 (False, False), (True, False)], exclude=-1)
+    check_eviction_victim_class([(False, True), (False, True)], exclude=0)
+
+
+def test_slo_quota_and_boost_fixed_draws():
+    check_slo_quota_and_boost(32, 16, 40, 40, 0, 6, 2, 8)
+    check_slo_quota_and_boost(48, 16, 64, 64, 8, 0, 1, 4)
+
+
+def test_slo_controller_math():
+    """need = max over slots of ceil(remaining / floor(slack/ewma));
+    pressure when slack < safety * remaining * ewma or realtime prefill
+    is pending; finished / undeadlined slots are ignored."""
+    ctl = SLOController(slo_hz=10.0, safety=2.0)
+    tick = ctl.plan(now=0.0, tick_ewma_s=0.01,
+                    rt_decode=[(12, 0.04), (3, 0.10)],
+                    rt_prefill_pending=False)
+    # slot 1: slack 0.04 -> 4 ticks -> ceil(12/4) = 3/tick; pressure
+    # (0.04 < 2 * 12 * 0.01); slot 2 comfortable (ceil(3/10) = 1)
+    assert tick.decode_need == 3 and tick.be_chunk_quota == 0
+    tick = ctl.plan(0.0, 0.01, [(4, 1.0)], rt_prefill_pending=False)
+    assert tick.decode_need == 1 and tick.be_chunk_quota is None
+    tick = ctl.plan(0.0, 0.01, [(0, 0.001), (5, math.inf)],
+                    rt_prefill_pending=False)
+    assert tick.decode_need == 0 and tick.be_chunk_quota is None
+    tick = ctl.plan(0.0, 0.01, [], rt_prefill_pending=True)
+    assert tick.be_chunk_quota == 0
+    with pytest.raises(ValueError, match="slo_hz"):
+        SLOController(slo_hz=0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +501,59 @@ def test_phase_report_percentiles_and_ttft(opts):
     assert len(eng.stats.ttft_s) == 3
     for r in eng.finished:
         assert r.ttft_s >= r.queue_s >= 0
+
+
+def test_realtime_jumps_best_effort_backlog(opts):
+    """A realtime control request submitted behind a best-effort backlog is
+    admitted class-first, finishes first, and scores its deadline in the
+    per-class scoreboard."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(9)
+    reqs = [(rng.integers(0, cfg.vocab_size, 48, dtype=np.int32), 6)
+            for _ in range(3)]
+    eng = ServingEngine(cfg, opts, params, n_slots=2, max_seq=64, eos=-999,
+                        fused=True, tick_tokens=4, paged=True, page_size=8,
+                        chunked_prefill=True, chunk_size=16, token_budget=16,
+                        slo_hz=20.0)
+    for i, (p, m) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=p.copy(), max_tokens=m))
+    eng.submit(Request(uid=99,
+                       prompt=rng.integers(0, cfg.vocab_size, 8,
+                                           dtype=np.int32),
+                       max_tokens=4, priority="realtime", deadline_s=60.0))
+    done = eng.run(max_ticks=2_000)
+    assert len(done) == 4
+    assert done[0].uid == 99, \
+        f"realtime request finished {[r.uid for r in done].index(99) + 1}th"
+    rep = eng.stats.phase_report()
+    assert rep["deadline_total_realtime"] == 1.0
+    assert rep["deadline_attainment_realtime"] == 1.0
+    assert rep["tick_ewma_s"] > 0
+
+
+def test_slo_engine_bit_equal_on_best_effort_workload(opts):
+    """With no realtime traffic and no deadlines, an slo_hz engine must
+    generate bit-identically to the static scheduler — the SLO controller
+    is a strict no-op without deadline pressure."""
+    cfg, params = reduced_params("smollm-135m")
+    rng = np.random.default_rng(10)
+    reqs = [(rng.integers(0, cfg.vocab_size, l, dtype=np.int32), m)
+            for l, m in [(13, 6), (29, 4), (7, 7)]]
+    kw = dict(chunked_prefill=True, chunk_size=16, token_budget=16,
+              paged=True, page_size=8)
+    base, _ = _streams(cfg, opts, params, reqs, **kw)
+    slo, _ = _streams(cfg, opts, params, reqs, slo_hz=10.0, **kw)
+    assert slo == base
+
+
+def test_slo_hz_engine_validation(opts):
+    cfg, params = reduced_params("smollm-135m")
+    with pytest.raises(ValueError, match="slo_hz"):
+        ServingEngine(cfg, opts, params, n_slots=2, max_seq=64, eos=-999,
+                      chunked_prefill=True, slo_hz=-1.0)
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        ServingEngine(cfg, opts, params, n_slots=2, max_seq=64, eos=-999,
+                      slo_hz=10.0)
 
 
 def test_positioned_prefill_model_api(opts):

@@ -17,6 +17,7 @@ from repro.serving.sampler import greedy, sample
 from conftest import reduced_params
 
 
+@pytest.mark.slow
 def test_engine_matches_single_stream(opts):
     cfg, params = reduced_params("qwen1.5-0.5b")
     eng = ServingEngine(cfg, opts, params, n_slots=3, max_seq=64, eos=-999)

@@ -153,6 +153,7 @@ def _reference(cfg, opts, params, reqs, paged, kv_dtype):
     return _REF_CACHE[key]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("paged,kv_dtype,spec_k,draft_layers,draft_quant", [
     (False, "bf16", 1, 1, None),
     (False, "bf16", 2, 1, None),
@@ -247,6 +248,45 @@ def test_spec_int8_defaults_to_token_granularity(opts):
     eng2 = ServingEngine(cfg, opts, params, n_slots=2, max_seq=32, eos=-1,
                          paged=True, page_size=8, kv_dtype="int8")
     assert eng2.scale_granularity == "head"
+
+
+def test_spec_cancel_mid_round_frees_pool_and_keeps_survivors(opts):
+    """Regression: ``cancel(uid)`` between ticks while speculative rounds
+    are in flight must return the slot's pool pages (pool back to baseline
+    after the drain) and must not disturb the surviving slot — its greedy
+    stream stays bit-equal to a solo run of the same request."""
+    cfg, params = reduced_params(ARCH)
+    rng = np.random.default_rng(11)
+    p0 = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, 9, dtype=np.int32)
+
+    def make():
+        return ServingEngine(cfg, opts, params, n_slots=2, max_seq=64,
+                             eos=-999, fused=True, tick_tokens=4,
+                             paged=True, page_size=8, spec_decode=True,
+                             spec_k=4, draft_layers=1)
+
+    ref_eng = make()
+    ref_eng.submit(Request(uid=1, prompt=p1.copy(), max_tokens=20))
+    ref = {r.uid: r.out_tokens for r in ref_eng.run()}[1]
+
+    eng = make()
+    assert eng.pool.pages_in_use == 0
+    req0 = Request(uid=0, prompt=p0.copy(), max_tokens=24)
+    eng.submit(req0)
+    eng.submit(Request(uid=1, prompt=p1.copy(), max_tokens=20))
+    for _ in range(3):              # both slots mid-decode, spec rounds run
+        eng.step_fused()
+    assert eng.stats.spec_verify_passes > 0
+    assert all(eng.slots[s] is not None for s in range(2))
+    assert eng.cancel(0), "uid 0 was not live anywhere"
+    done = eng.run()
+    assert {r.uid for r in done} == {1}, "cancelled request reached finished"
+    assert {r.uid: r.out_tokens for r in done}[1] == ref, \
+        "survivor's stream diverged after a mid-spec-round cancel"
+    assert eng.pool.pages_in_use == 0, \
+        "cancel leaked pool pages past the drain"
+    assert req0.cancelled and not req0.done
 
 
 # -- live_bound: per-slot bound normalization ------------------------------
