@@ -17,8 +17,8 @@ import traceback
 from benchmarks import (claims_check, decode_microbench, engine_bench,
                         fig2_phase_latency, fig3_control_frequency,
                         frontend_bench, kv_cache_bench, perf_compare,
-                        roofline_report, scheduler_bench, spec_decode_bench,
-                        table1_hardware)
+                        roofline_report, scheduler_bench, sharded_bench,
+                        spec_decode_bench, table1_hardware)
 
 MODULES = {
     "claims": claims_check,
@@ -33,6 +33,7 @@ MODULES = {
     "scheduler": scheduler_bench,
     "frontend": frontend_bench,
     "spec_decode": spec_decode_bench,
+    "sharded": sharded_bench,
 }
 
 

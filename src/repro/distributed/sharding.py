@@ -61,6 +61,38 @@ INFERENCE_RULES = {**DEFAULT_RULES, "embed": None, "mlp": ("model", "data")}
 SEQ_PARALLEL_RULES = {**DEFAULT_RULES, "act_seq": "model"}
 
 
+# Serving (shard_map tensor parallelism over a 1-axis 'model' mesh; see
+# serving.engine): batch is the engine's slot axis and never shards, the KV
+# cache partitions on its head axis only (each shard owns the pages for its
+# heads — kv_seq sequence parallelism would split pages mid-stream), and
+# weights replicate over everything but 'model' (the INFERENCE_RULES
+# argument: FSDP all-gathers are the wrong trade at decode).
+SERVING_RULES = {**INFERENCE_RULES,
+                 "mlp": "model",
+                 "batch": None,
+                 "kv_seq": None,
+                 "act_seq": None}
+
+
+def serving_rules(n_model: int, num_heads: int, num_kv_heads: int) -> dict:
+    """SERVING_RULES specialized to one model: the head axes shard only if
+    *both* ``num_heads`` and ``num_kv_heads`` divide the model-axis size,
+    else both replicate.
+
+    Per-leaf divisibility (``spec_for``) is not enough for GQA: it would
+    happily shard 16 query heads over model=4 while replicating 9 KV heads,
+    and the grouped-attention head mapping (query head ``n`` reads KV head
+    ``n // G``) silently pairs the wrong heads when only one side is local.
+    Sharding both or neither keeps the local group structure identical to
+    the global one (smollm's 9/3 heads replicate over model=2, 4; shard
+    over model=3). MLP and vocab dims still fall back per-leaf."""
+    heads_ok = (num_heads % n_model == 0) and (num_kv_heads % n_model == 0)
+    head_ax = "model" if heads_ok else None
+    return {**SERVING_RULES,
+            "heads": head_ax, "kv_heads": head_ax,
+            "act_heads": head_ax, "act_kv_heads": head_ax}
+
+
 class _State(threading.local):
     def __init__(self):
         self.mesh: Optional[Mesh] = None

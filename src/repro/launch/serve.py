@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.workload import fleet_trace
+from repro.launch.mesh import make_serving_mesh
 from repro.models import model as M
 from repro.models.layers import ModelOptions
 from repro.serving import AsyncFrontend, Backpressure, Request, ServingEngine
@@ -69,6 +70,15 @@ def main(argv=None):
     p.add_argument("--reference", action="store_true",
                    help="per-token decode path instead of the fused tick")
     p.add_argument("--tick-tokens", type=int, default=8)
+    p.add_argument("--mesh-model", type=int, default=1,
+                   help="shard the engine over a model=N serving mesh: "
+                        "attention heads, MLP and the paged KV pool "
+                        "partition across N devices, with one lm-head "
+                        "all-gather per tick (greedy streams stay "
+                        "bit-equal to single-device; heads replicate "
+                        "when N does not divide the head counts). "
+                        "Requires N visible devices — on CPU set "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     p.add_argument("--paged", action="store_true",
                    help="paged KV cache (shared page pool + per-slot page "
                         "tables, prefix caching) instead of dense per-slot "
@@ -185,8 +195,12 @@ def main(argv=None):
     params = M.init_params(M.model_template(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
 
+    mesh = (make_serving_mesh(args.mesh_model)
+            if args.mesh_model > 1 else None)
+
     def make_engine():
         return ServingEngine(cfg, opts, params, n_slots=args.slots,
+                             mesh=mesh,
                              max_seq=args.max_seq, eos=-1,
                              fused=not args.reference,
                              tick_tokens=args.tick_tokens,
@@ -255,6 +269,10 @@ def main(argv=None):
               f"pages_hwm={st.pages_hwm} "
               f"cache_bytes_hwm={st.cache_bytes_hwm} "
               f"prefix_hits={st.prefix_hits}")
+    if st.mesh_shape:
+        print(f"[serve] mesh: "
+              f"{'x'.join(f'{a}={n}' for a, n in st.mesh_shape)} "
+              f"cache_bytes_hwm_shard={st.cache_bytes_hwm_shard}")
     if args.spec_decode:
         print(f"[serve] speculative: K={args.spec_k} "
               f"draft_quant={args.draft_quant} "

@@ -51,6 +51,14 @@ class ModelOptions:
     window_cache: bool = False         # per-layer-window KV cache (perf opt)
     unroll_layers: bool = False        # unroll the layer scan (cost-analysis
     #                                    validation: XLA counts scan bodies once)
+    shard_axis: Optional[str] = None   # shard_map mesh axis the serving
+    #                                    engine runs this trace under: the
+    #                                    attention/MLP output projections
+    #                                    psum their partial sums over it and
+    #                                    the lm head all-gathers, but only
+    #                                    for params whose local shape is
+    #                                    actually sharded (replicated
+    #                                    fallbacks stay collective-free)
 
 
 # ---------------------------------------------------------------------------
@@ -862,6 +870,12 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
                                  causal=causal, q_pos=positions,
                                  k_pos=positions)
     out = jnp.einsum("bsnh,nhd->bsd", out, p[pre + "wo"])
+    if (opts.shard_axis is not None and not pre
+            and p["wo"].shape[0] != cfg.num_heads):
+        # head-sharded trace (shard_map): each shard computed its heads'
+        # slice of the output projection, a partial sum over the full
+        # d_model — the Megatron row-parallel reduction point
+        out = jax.lax.psum(out, opts.shard_axis)
     return out, new_cache
 
 
@@ -869,7 +883,8 @@ def attention(p, x, cfg: ModelConfig, opts: ModelOptions, window: int,
 # MLP / MoE
 # ---------------------------------------------------------------------------
 
-def mlp(p, x, cfg: ModelConfig, prefix: str = ""):
+def mlp(p, x, cfg: ModelConfig, prefix: str = "",
+        shard_axis: Optional[str] = None):
     h = jnp.einsum("bsd,df->bsf", x, p[prefix + "wi"])
     if cfg.act in ("silu", "gelu"):
         g = jnp.einsum("bsd,df->bsf", x, p[prefix + "wg"])
@@ -877,7 +892,11 @@ def mlp(p, x, cfg: ModelConfig, prefix: str = ""):
     else:
         h = _act(h, None, cfg.act)
     h = constrain(h, "batch", "act_seq", "act_mlp")
-    return jnp.einsum("bsf,fd->bsd", h, p[prefix + "wo_mlp"])
+    out = jnp.einsum("bsf,fd->bsd", h, p[prefix + "wo_mlp"])
+    if shard_axis is not None and p[prefix + "wo_mlp"].shape[0] != cfg.d_ff:
+        # f-sharded trace (shard_map): partial sum over the hidden width
+        out = jax.lax.psum(out, shard_axis)
+    return out
 
 
 def moe(p, x, cfg: ModelConfig, opts: ModelOptions):

@@ -55,8 +55,23 @@ def model_template(cfg: ModelConfig) -> Dict:
     return t
 
 
-def _embed_tokens(params, tokens, cfg: ModelConfig, positions=None):
-    x = jnp.take(params["embed"], tokens, axis=0)
+def _embed_tokens(params, tokens, cfg: ModelConfig, positions=None,
+                  shard_axis=None):
+    emb = params["embed"]
+    if shard_axis is not None and emb.shape[0] != cfg.vocab_size:
+        # vocab-sharded trace (shard_map): shard i holds embedding rows
+        # [i*vl, (i+1)*vl). Look up the local slice with out-of-range ids
+        # masked to row 0, zero the misses, and psum — exactly one shard
+        # contributes each token's row
+        vl = emb.shape[0]
+        i = jax.lax.axis_index(shard_axis)
+        loc = tokens - i * vl
+        ok = (loc >= 0) & (loc < vl)
+        x = jnp.take(emb, jnp.where(ok, loc, 0), axis=0)
+        x = jax.lax.psum(jnp.where(ok[..., None], x, jnp.zeros_like(x)),
+                         shard_axis)
+    else:
+        x = jnp.take(emb, tokens, axis=0)
     if cfg.pos == "absolute":
         pos = positions if positions is not None else jnp.arange(tokens.shape[-1])
         x = x + jnp.take(params["pos"], pos, axis=0).astype(x.dtype)
@@ -90,10 +105,16 @@ def encode_vision(cfg: ModelConfig, opts: ModelOptions, params, patches):
     return stacks.apply_tower(params["vision"], patches, cfg.vision, opts)
 
 
-def _logits(params, x, cfg: ModelConfig):
+def _logits(params, x, cfg: ModelConfig, shard_axis=None):
     x = apply_norm(params, x, cfg, "final_norm")
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.einsum("bsd,vd->bsv", x, head)   # head [V, D]
+    if shard_axis is not None and head.shape[0] != cfg.vocab_size:
+        # vocab-sharded trace (shard_map): the single all-gather of the
+        # sharded serving program — local [B,S,V/n] logit slices tile back
+        # to the full vocab right before sampling
+        logits = jax.lax.all_gather(logits, shard_axis, axis=logits.ndim - 1,
+                                    tiled=True)
     return constrain(logits, "batch", "act_seq", "act_vocab")
 
 
@@ -103,11 +124,12 @@ def _sequence(params, batch, cfg, opts):
     ctx, prefix = _encode_context(params, batch, cfg, opts)
     if prefix is not None:
         n_vis = prefix.shape[1]
-        text = _embed_tokens(params, tokens, cfg)
+        text = _embed_tokens(params, tokens, cfg,
+                             shard_axis=opts.shard_axis)
         x = jnp.concatenate([prefix.astype(text.dtype), text], axis=1)
         S = x.shape[1]
     else:
-        x = _embed_tokens(params, tokens, cfg)
+        x = _embed_tokens(params, tokens, cfg, shard_axis=opts.shard_axis)
         S = x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(S), (x.shape[0], S))
     return x, positions, ctx
@@ -120,12 +142,13 @@ def forward(cfg: ModelConfig, opts: ModelOptions, params, batch,
     x = constrain(x, "batch", "act_seq", "act_embed")
     x, _ = stacks.apply_decoder(params["decoder"], x, cfg, opts, positions,
                                 ctx=ctx, train=train)
-    return _logits(params, x, cfg)
+    return _logits(params, x, cfg, shard_axis=opts.shard_axis)
 
 
 def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
             max_seq: int, cache_dtype=jnp.bfloat16, caches=None,
-            cache_index=0, page_table=None, live_len=None):
+            cache_index=0, page_table=None, live_len=None,
+            fresh_caches=None):
     """Process the prompt, filling a decode cache sized ``max_seq``.
     Returns (last-position logits [B,1,V], caches).
 
@@ -150,7 +173,13 @@ def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
         or not (isinstance(cache_index, int) and cache_index == 0)
     if not positioned:
         x, positions, ctx = _sequence(params, batch, cfg, opts)
-        caches = init_caches(cfg, x.shape[0], max_seq, cache_dtype, opts)
+        # fresh_caches substitutes for the internally-allocated zeros on
+        # this prefill-from-zero path (caller-shaped, e.g. per-shard head
+        # slices inside a shard_map trace, where init_caches would build
+        # the global head count); it must be a zeroed dense cache tree and
+        # does not flip the call into positioned mode
+        caches = (fresh_caches if fresh_caches is not None else
+                  init_caches(cfg, x.shape[0], max_seq, cache_dtype, opts))
         if live_len is None:
             live_len = x.shape[1]
     else:
@@ -166,7 +195,8 @@ def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
         positions = jnp.broadcast_to(
             jnp.asarray(cache_index, jnp.int32) +
             jnp.arange(S, dtype=jnp.int32), (B, S))
-        x = _embed_tokens(params, tokens, cfg, positions=positions)
+        x = _embed_tokens(params, tokens, cfg, positions=positions,
+                          shard_axis=opts.shard_axis)
         ctx = None
         if live_len is None and isinstance(cache_index, int):
             live_len = cache_index + S
@@ -175,7 +205,8 @@ def prefill(cfg: ModelConfig, opts: ModelOptions, params, batch,
                                      cache_index=cache_index, ctx=ctx,
                                      page_table=page_table,
                                      live_len=live_len)
-    return _logits(params, x[:, -1:], cfg), caches
+    return _logits(params, x[:, -1:], cfg,
+                   shard_axis=opts.shard_axis), caches
 
 
 def embed_prompt(cfg: ModelConfig, opts: ModelOptions, params, batch):
@@ -222,7 +253,8 @@ def prefill_chunk(cfg: ModelConfig, opts: ModelOptions, params, embeds,
                                      live_len=live_len)
     last = C - 1 if n_valid is None else jnp.asarray(n_valid, jnp.int32) - 1
     x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
-    return _logits(params, x_last, cfg), caches
+    return _logits(params, x_last, cfg,
+                   shard_axis=opts.shard_axis), caches
 
 
 def decode_step(cfg: ModelConfig, opts: ModelOptions, params, token,
@@ -241,13 +273,14 @@ def decode_step(cfg: ModelConfig, opts: ModelOptions, params, token,
     idx = jnp.asarray(index, jnp.int32)
     positions = (jnp.full((B, 1), idx, jnp.int32) if idx.ndim == 0
                  else idx[:, None])
-    x = _embed_tokens(params, token, cfg, positions=positions)
+    x = _embed_tokens(params, token, cfg, positions=positions,
+                      shard_axis=opts.shard_axis)
     x = constrain(x, "batch", "act_seq", "act_embed")
     x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
                                      positions, caches=caches,
                                      cache_index=index,
                                      page_table=page_table)
-    return _logits(params, x, cfg), caches
+    return _logits(params, x, cfg, shard_axis=opts.shard_axis), caches
 
 
 def draft_step(cfg: ModelConfig, opts: ModelOptions, params, token, caches,
@@ -267,14 +300,15 @@ def draft_step(cfg: ModelConfig, opts: ModelOptions, params, token, caches,
     idx = jnp.asarray(index, jnp.int32)
     positions = (jnp.full((B, 1), idx, jnp.int32) if idx.ndim == 0
                  else idx[:, None])
-    x = _embed_tokens(params, token, cfg, positions=positions)
+    x = _embed_tokens(params, token, cfg, positions=positions,
+                      shard_axis=opts.shard_axis)
     x = constrain(x, "batch", "act_seq", "act_embed")
     x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
                                      positions, caches=caches,
                                      cache_index=index,
                                      page_table=page_table, n_valid=n_valid,
                                      n_blocks=draft_blocks)
-    return _logits(params, x, cfg), caches
+    return _logits(params, x, cfg, shard_axis=opts.shard_axis), caches
 
 
 def verify_chunk(cfg: ModelConfig, opts: ModelOptions, params, tokens,
@@ -302,14 +336,15 @@ def verify_chunk(cfg: ModelConfig, opts: ModelOptions, params, tokens,
     idx = jnp.asarray(cache_index, jnp.int32)
     start = jnp.broadcast_to(idx.reshape(-1, 1), (B, 1))
     positions = start + jnp.arange(K, dtype=jnp.int32)[None]
-    x = _embed_tokens(params, tokens, cfg, positions=positions)
+    x = _embed_tokens(params, tokens, cfg, positions=positions,
+                      shard_axis=opts.shard_axis)
     x = constrain(x, "batch", "act_seq", "act_embed")
     x, caches = stacks.apply_decoder(params["decoder"], x, cfg, opts,
                                      positions, caches=caches,
                                      cache_index=cache_index,
                                      page_table=page_table, n_valid=n_valid,
                                      live_len=live_len)
-    return _logits(params, x, cfg), caches
+    return _logits(params, x, cfg, shard_axis=opts.shard_axis), caches
 
 
 def decode_loop(cfg: ModelConfig, opts: ModelOptions, params, token, caches,

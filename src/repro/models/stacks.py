@@ -250,7 +250,7 @@ def apply_sublayer(p, x, cfg: ModelConfig, opts: L.ModelOptions, kind: SubKind,
         h = L.apply_norm(p, x, cfg, "ln2")
         y = 0.0
         if kind.ffn in ("dense", "moe+dense"):
-            y = y + L.mlp(p, h, cfg)
+            y = y + L.mlp(p, h, cfg, shard_axis=opts.shard_axis)
         if kind.ffn in ("moe", "moe+dense"):
             y = y + L.moe(p, h, cfg, opts)
         x = x + y

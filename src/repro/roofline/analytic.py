@@ -50,11 +50,15 @@ def _mesh_sizes(multi_pod: bool):
 
 def params_bytes_per_dev(cfg: ModelConfig, mesh: Dict[str, int],
                          dtype_bytes: int = BYTES,
-                         rules: Optional[dict] = None) -> float:
-    """Exact per-device parameter bytes under the logical-axis rules."""
+                         rules: Optional[dict] = None,
+                         template: Optional[dict] = None) -> float:
+    """Exact per-device parameter bytes under the logical-axis rules.
+    ``template`` overrides the priced PSpec tree (e.g. the serving
+    projection prices decoder/embed sharded but towers replicated)."""
     import jax
     rules = rules or DEFAULT_RULES
-    template = M.model_template(cfg)
+    if template is None:
+        template = M.model_template(cfg)
     total = 0.0
     for leaf in jax.tree.leaves(template,
                                 is_leaf=lambda x: isinstance(x, PSpec)):

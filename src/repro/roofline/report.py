@@ -15,6 +15,8 @@ import os
 from dataclasses import asdict, dataclass
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.core.hardware import TPU_V5E
 
 
@@ -116,6 +118,71 @@ def to_terms(row: Dict, use_analytic: bool = True) -> RooflineTerms:
         model_flops=row["model_flops"],
         temp_bytes_per_dev=row["memory"].get("temp_size_in_bytes", 0.0),
         arg_bytes_per_dev=row["memory"].get("argument_size_in_bytes", 0.0))
+
+
+@dataclass
+class ServingProjection:
+    """Per-device view of a sharded serving engine (mesh shape in →
+    per-device cache + weight bytes and the bandwidth-bound tick floor)."""
+    arch: str
+    mesh_model: int
+    heads_sharded: bool          # serving rule table outcome (GQA-atomic)
+    weight_bytes_per_dev: float
+    cache_bytes_per_dev: float
+    cache_bytes_total: float     # the engine's summed figure, for reference
+
+    @property
+    def t_tick_s(self) -> float:
+        """Bandwidth-bound decode-tick floor: one full weight + live-cache
+        HBM pass per decoded token (the paper's memory-bound action
+        generation term), at the per-device slice sizes."""
+        return ((self.weight_bytes_per_dev + self.cache_bytes_per_dev)
+                / (TPU_V5E.mem_bw_gbs * 1e9))
+
+    def row(self) -> Dict:
+        d = asdict(self)
+        d["t_tick_s"] = self.t_tick_s
+        return d
+
+
+def serving_projection(cfg, n_model: int, cache_bytes_total: float,
+                       weight_dtype_bytes: int = 2) -> ServingProjection:
+    """Project a single-device serving measurement onto a ``model=n_model``
+    mesh, from the same rule table ``ServingEngine(mesh=...)`` shards with.
+
+    ``cache_bytes_total`` is the engine's measured summed cache figure
+    (``EngineStats.cache_bytes_hwm``). Every paged leaf — K/V pools and
+    their scale siblings — carries the KV-head axis, so per-device cache
+    bytes are exactly ``total / n_model`` when the serving rules shard the
+    head axis and ``total`` when GQA-atomic divisibility forces the
+    replication fallback (e.g. smollm's 9/3 heads over model=2). A sharded
+    engine's ``cache_bytes_hwm_shard`` must reproduce this number; the
+    ``sharded`` bench gates on it. Weights price through the analytic
+    per-device pricer under the serving rules, with tower params (vision /
+    action head) held replicated like the serving program keeps them.
+    The 100B-scale projection is the same call with the big config and a
+    measured-or-modelled cache total."""
+    from repro.distributed.sharding import serving_rules
+    from repro.models import model as M
+    from repro.models.params import is_pspec
+    from repro.roofline.analytic import params_bytes_per_dev
+    rules = serving_rules(n_model, cfg.num_heads, cfg.num_kv_heads)
+    heads_sharded = rules["kv_heads"] is not None and n_model > 1
+    templ = M.model_template(cfg)
+    towers = [templ.pop(k) for k in ("vision", "encoder", "action_dit")
+              if k in templ]
+    wb = params_bytes_per_dev(cfg, {"model": n_model}, weight_dtype_bytes,
+                              rules, template=templ)
+    import jax
+    wb += sum(float(np.prod(leaf.shape)) * weight_dtype_bytes
+              for t in towers
+              for leaf in jax.tree_util.tree_leaves(t, is_leaf=is_pspec))
+    return ServingProjection(
+        arch=cfg.name, mesh_model=n_model, heads_sharded=heads_sharded,
+        weight_bytes_per_dev=wb,
+        cache_bytes_per_dev=float(cache_bytes_total)
+        / (n_model if heads_sharded else 1),
+        cache_bytes_total=float(cache_bytes_total))
 
 
 def markdown_table(rows: List[RooflineTerms]) -> str:

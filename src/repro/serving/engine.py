@@ -72,24 +72,29 @@ and per-tick latency lists (``tick_s``/``decode_tick_s``, with p50/p99 in
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import hashlib
 import math
 import time
 import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.distributed.sharding import serving_rules, spec_for
 from repro.models import kv_quant
 from repro.models import model as M
 from repro.models.layers import ModelOptions, band_len
-from repro.models.stacks import (cache_batch_axis, is_paged_leaf,
-                                 is_scale_leaf, stack_plan)
+from repro.models.params import is_pspec
+from repro.models.stacks import (cache_batch_axis, cache_template,
+                                 is_paged_leaf, is_scale_leaf, stack_plan)
 from repro.serving import sampler as S
 from repro.serving.kv_pool import KVPool, PoolExhausted
 from repro.serving.scheduler import (BEST_EFFORT, ChunkedScheduler, ChunkPlan,
@@ -162,6 +167,14 @@ class EngineStats:
     pages_hwm: int = 0          # paged: high-water pages in use
     cache_bytes_hwm: int = 0    # paged: high-water KV bytes actually held
     prefix_hits: int = 0        # paged: pages reused via the prefix cache
+    # sharded serving (ServingEngine mesh=...): mesh_shape names the mesh
+    # axes, e.g. (("model", 4),), and cache_bytes_hwm_shard is the
+    # *per-device* byte high-water — each shard stores its own heads' slice
+    # of every page, so the honest per-device figure is ~1/N of the summed
+    # cache_bytes_hwm (replicated leaves, e.g. a head-replication fallback,
+    # keep it higher). Without a mesh, shard == total.
+    mesh_shape: Optional[Tuple] = None
+    cache_bytes_hwm_shard: int = 0
     # queue_s / ttft_s are per-*event* samples: one entry per admission
     # (submit -> prefill start) and per prefill completion (submit -> first
     # token). Without preemption that is exactly one entry per request; a
@@ -265,6 +278,21 @@ class EngineStats:
             rep[f"preemptions_{cls}"] = float(n)
         if self.tick_ewma_s:
             rep["tick_ewma_s"] = float(self.tick_ewma_s)
+        # paged cache accounting (and, under a mesh, the per-device view:
+        # scrapers must not read the summed figure as a per-device one)
+        if self.pages_hwm:
+            rep["pages_in_use"] = float(self.pages_in_use)
+            rep["pages_hwm"] = float(self.pages_hwm)
+            rep["cache_bytes_hwm"] = float(self.cache_bytes_hwm)
+            rep["prefix_hits"] = float(self.prefix_hits)
+        if self.mesh_shape:
+            for ax, sz in self.mesh_shape:
+                rep[f"mesh_{ax}"] = float(sz)
+            if self.pages_hwm:
+                rep["cache_bytes_hwm_shard"] = float(self.cache_bytes_hwm_shard)
+                # every shard references the same page set (it owns a head
+                # slice of each page), so the count is per-device as-is
+                rep["pages_in_use_shard"] = float(self.pages_in_use)
         if self.spec_verify_passes:
             emitted = sum(n * c for n, c in enumerate(self.spec_accept_hist))
             rep["spec_verify_passes"] = float(self.spec_verify_passes)
@@ -553,9 +581,32 @@ class ServingEngine:
                  draft_layers: Optional[int] = None,
                  draft_quant: Optional[str] = None,
                  scale_granularity: Optional[str] = None,
-                 slo_hz: float = 0.0):
+                 slo_hz: float = 0.0, mesh: Optional[Mesh] = None):
         if tick_tokens < 1:
             raise ValueError(f"tick_tokens must be >= 1, got {tick_tokens}")
+        if mesh is not None:
+            # sharded serving: every device stage becomes one shard_map-ped
+            # program over the 'model' axis (see _init_mesh_stages). The
+            # host-side scheduler/pool layer never sees the mesh.
+            if "model" not in mesh.axis_names:
+                raise ValueError("ServingEngine mesh needs a 'model' axis "
+                                 "(launch.mesh.make_serving_mesh)")
+            if any(mesh.shape[a] != 1 for a in mesh.axis_names
+                   if a != "model"):
+                raise ValueError("ServingEngine shards over 'model' only; "
+                                 "every other mesh axis must have size 1")
+            if cfg.encoder is not None:
+                raise ValueError("mesh serving does not support "
+                                 "encoder-decoder models (cross-attention "
+                                 "context has no serving shard rule)")
+            if not all(cfg.is_attn_layer(i) for i in range(cfg.num_layers)):
+                raise ValueError("mesh serving requires attention-only "
+                                 "decoders (SSM state has no head axis to "
+                                 "partition the cache on)")
+            if cfg.num_experts:
+                raise ValueError("mesh serving does not support MoE layers "
+                                 "(expert-parallel serving is not wired "
+                                 "into the shard_map program)")
         if slo_hz < 0:
             raise ValueError(f"slo_hz must be >= 0, got {slo_hz}")
         if slo_hz > 0 and not chunked_prefill:
@@ -667,6 +718,8 @@ class ServingEngine:
                     "(see docs/speculative.md)")
         self.scale_granularity = scale_granularity    # None when unquantized
         self.cfg, self.opts, self.params = cfg, opts, params
+        self.mesh = mesh
+        self._c1specs = None               # set by _init_mesh_stages
         self.n_slots, self.max_seq, self.eos = n_slots, max_seq, eos
         self.prompt_len = prompt_len
         self.fused, self.tick_tokens = fused, tick_tokens
@@ -704,6 +757,9 @@ class ServingEngine:
             self.caches = M.init_caches(cfg, n_slots, max_seq, jnp.float32,
                                         opts)
             self._bytes_per_page = 0
+        # per-device bytes per page: equals the summed figure on one device,
+        # recomputed from actual shard buffers under a mesh
+        self._bytes_per_page_shard = self._bytes_per_page
         self.stats = EngineStats()
         self.key = jax.random.PRNGKey(seed)
         self.scheduler: Optional[ChunkedScheduler] = None
@@ -730,6 +786,14 @@ class ServingEngine:
                         if cfg.vision is not None else None)
         self._tick = _jit_tick(cfg, opts, tick_tokens, eos, temperature,
                                top_k, stop_on_finish)
+        # cache-maintenance stages behind instance indirection so every call
+        # site (admission, COW, scale resets) is layout-agnostic; a mesh
+        # swaps these for shard_map-ped equivalents below
+        self._scatter_slot_fn = _scatter_slot
+        self._scatter_pages_fn = (
+            lambda c, c1, d: _scatter_pages(c, c1, d, self.page_size))
+        self._copy_pages_fn = _copy_pages
+        self._reset_scales_fn = _reset_page_scales
         self._spec_tick = None
         if spec_decode:
             # the weight-quantized draft shares the tree structure (and
@@ -740,6 +804,173 @@ class ServingEngine:
             self._spec_tick = _jit_spec_tick(cfg, opts, tick_tokens, spec_k,
                                              self.draft_blocks, eos,
                                              stop_on_finish, max_seq)
+        if mesh is not None:
+            self._init_mesh_stages(mesh, stop_on_finish)
+
+    # -- sharded serving (mesh) -------------------------------------------
+    def _init_mesh_stages(self, mesh: Mesh, stop_on_finish: bool):
+        """Rebind every device stage as a single shard_map-ped program over
+        the mesh's ``model`` axis, and partition params + KV pool across it.
+
+        Layout (Megatron-style tensor parallelism, serving_rules):
+
+        - attention heads and KV-cache pages shard on the head axis: each
+          device owns ``[num_pages, page_size, K/n, h]`` slices of every
+          page, so the paged kernels run *unchanged* per shard and the
+          host-side page tables stay global (replicated operands). GQA
+          divisibility is atomic — smollm's 9/3 heads replicate over
+          model=2/4 and the program is collective-free for them.
+        - MLP width and vocab shard per-leaf; partial attention/MLP outputs
+          psum inside the layer (layers.attention / layers.mlp) and the
+          *only* all-gather sits at the lm head, right before sampling
+          (model._logits) — the activation wire cost per decoded token is
+          2 psums/layer + one [V] gather.
+        - everything the host scheduler/pool touches (page tables, token
+          state, budgets) is replicated, so scheduler/kv_pool code observes
+          no mesh at all.
+
+        ``check_rep=False`` everywhere: jax 0.4.x has no replication rule
+        for ``lax.while_loop``, which both fused ticks are built on."""
+        cfg, opts = self.cfg, self.opts
+        rules = serving_rules(mesh.shape["model"], cfg.num_heads,
+                              cfg.num_kv_heads)
+        self._serving_rule_table = rules
+        shopts = dataclasses.replace(opts, shard_axis="model")
+
+        def specs_of(template):
+            return jax.tree_util.tree_map(
+                lambda s: spec_for(s.shape, s.axes, mesh, rules),
+                template, is_leaf=is_pspec)
+
+        templ = M.model_template(cfg)
+        pspecs = specs_of(templ)
+        # towers (vision / action head) run as plain einsum stacks with no
+        # collective insertion — their params must stay whole per shard
+        for k in ("vision", "encoder", "action_dit"):
+            if k in pspecs:
+                pspecs[k] = jax.tree_util.tree_map(
+                    lambda s: P(), templ[k], is_leaf=is_pspec)
+        if self.paged:
+            cspecs = specs_of(cache_template(
+                cfg, self.n_slots, self.max_seq, jnp.float32, opts,
+                paged=True, num_pages=self.pool.num_pages,
+                page_size=self.page_size, kv_dtype=self.kv_dtype,
+                scale_granularity=(self.scale_granularity or "head")))
+        else:
+            cspecs = specs_of(cache_template(cfg, self.n_slots, self.max_seq,
+                                             jnp.float32, opts))
+        # batch-1 dense cache (prefill output / chunked-prefill carry)
+        c1specs = specs_of(cache_template(cfg, 1, self.max_seq, jnp.float32,
+                                          opts))
+        self._c1specs = c1specs
+
+        def place(tree, specs):
+            return jax.tree_util.tree_map(
+                lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+                tree, specs)
+
+        self.params = place(self.params, pspecs)
+        self.caches = place(self.caches, cspecs)
+        if self.spec_decode:
+            self.draft_params = place(self.draft_params, pspecs)
+        if self.paged:
+            # honest per-device accounting: measure the shard buffers, so a
+            # head-replication fallback (or replicated scale rows) reports
+            # its true per-device cost instead of an assumed 1/N
+            self._bytes_per_page_shard = sum(
+                leaf.addressable_shards[0].data.nbytes // self.pool.num_pages
+                for path, leaf in
+                jax.tree_util.tree_leaves_with_path(self.caches)
+                if is_paged_leaf(path))
+        self.stats.mesh_shape = tuple(
+            (a, int(mesh.shape[a])) for a in mesh.axis_names)
+
+        R = P()
+
+        def smap(f, in_specs, out_specs):
+            return shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+
+        self._decode = jax.jit(smap(
+            lambda p, t, c, i, pt: M.decode_step(cfg, shopts, p, t, c, i,
+                                                 page_table=pt),
+            (pspecs, R, cspecs, R, R), (R, cspecs)))
+        # monolithic prefill: the prefill-from-zero path must not allocate
+        # its own caches inside the shard trace (init_caches would build the
+        # global head count), so a reusable sharded zero tree rides along
+        self._cache1_zeros = place(
+            M.init_caches(cfg, 1, self.max_seq, jnp.float32, opts), c1specs)
+        prefill_sharded = jax.jit(smap(
+            lambda p, b, c0: M.prefill(cfg, shopts, p, b, self.max_seq,
+                                       cache_dtype=jnp.float32,
+                                       fresh_caches=c0),
+            (pspecs, R, c1specs), (R, c1specs)))
+        self._prefill = lambda p, b: prefill_sharded(p, b,
+                                                     self._cache1_zeros)
+        self._tick = jax.jit(smap(
+            functools.partial(_fused_tick, cfg, shopts, self.tick_tokens,
+                              self.eos, self.temperature, self.top_k,
+                              stop_on_finish),
+            (pspecs, R, cspecs, R, R, R, R, R, R),
+            (R, cspecs, R, R, R, R, R, R, R)))
+        if self.spec_decode:
+            def spec_tick(live_len, p, dp, t, c, i, b, d, ms, pt):
+                f = functools.partial(
+                    _fused_spec_tick, cfg, shopts, self.tick_tokens,
+                    self.spec_k, self.draft_blocks, self.eos,
+                    stop_on_finish, self.max_seq, live_len)
+                return smap(f, (pspecs, pspecs, R, cspecs, R, R, R, R, R),
+                            (R, cspecs, R, R, R, R, R, R, R, R))(
+                    p, dp, t, c, i, b, d, ms, pt)
+            self._spec_tick = jax.jit(spec_tick, static_argnums=0)
+        if self.scheduler is not None:
+            if self.paged:
+                def prefill_chunk(p, e, c, i, nv, pt, live):
+                    f = lambda p, e, c, i, nv, pt: M.prefill_chunk(
+                        cfg, shopts, p, e, c, i, n_valid=nv, page_table=pt,
+                        live_len=live)
+                    return smap(f, (pspecs, R, cspecs, R, R, R),
+                                (R, cspecs))(p, e, c, i, nv, pt)
+                self._prefill_chunk = jax.jit(prefill_chunk,
+                                              donate_argnums=2,
+                                              static_argnums=6)
+            else:
+                def prefill_chunk(p, e, c, i, nv, live):
+                    f = lambda p, e, c, i, nv: M.prefill_chunk(
+                        cfg, shopts, p, e, c, i, n_valid=nv, live_len=live)
+                    return smap(f, (pspecs, R, c1specs, R, R),
+                                (R, c1specs))(p, e, c, i, nv)
+                self._prefill_chunk = jax.jit(prefill_chunk,
+                                              donate_argnums=2,
+                                              static_argnums=5)
+
+        def scatter_slot(c, c1, slot, skip_paged):
+            return smap(lambda a, b: _scatter_slot(a, b, slot, skip_paged),
+                        (cspecs, c1specs), cspecs)(c, c1)
+        self._scatter_slot_fn = jax.jit(scatter_slot, static_argnums=(2, 3))
+        if self.paged:
+            page_size = self.page_size
+            self._scatter_pages_fn = jax.jit(smap(
+                lambda c, c1, d: _scatter_pages_impl(c, c1, d, page_size),
+                (cspecs, c1specs, R), cspecs), donate_argnums=0)
+            self._copy_pages_fn = jax.jit(
+                smap(_copy_pages_impl, (cspecs, R, R), cspecs),
+                donate_argnums=0)
+            self._reset_scales_fn = jax.jit(
+                smap(_reset_page_scales_impl, (cspecs, R), cspecs),
+                donate_argnums=0)
+
+    def _fresh_cache1(self):
+        """Zeroed batch-1 dense cache for one chunked-prefill admission.
+        Dense chunks donate their cache carry, so each admission needs its
+        own tree (the monolithic path's zeros are reusable — prefill there
+        is non-donating)."""
+        c = M.init_caches(self.cfg, 1, self.max_seq, jnp.float32, self.opts)
+        if self.mesh is not None:
+            c = jax.tree_util.tree_map(
+                lambda x, sp: jax.device_put(
+                    x, NamedSharding(self.mesh, sp)), c, self._c1specs)
+        return c
 
     def _sample_host(self, logits):
         """Host-path sampling (admission + reference step) with the same
@@ -842,8 +1073,14 @@ class ServingEngine:
         st, pool = self.stats, self.pool
         st.pages_in_use = pool.pages_in_use
         st.pages_hwm = max(st.pages_hwm, pool.pages_hwm)
-        st.cache_bytes_hwm = max(st.cache_bytes_hwm,
-                                 pool.pages_in_use * self._bytes_per_page)
+        # the pool tracks page indices only; bytes-per-page is the engine's
+        # layout knowledge (KVPool.byte_stats keeps the pool mesh-blind)
+        st.cache_bytes_hwm = max(
+            st.cache_bytes_hwm,
+            pool.byte_stats(self._bytes_per_page)["bytes_in_use"])
+        st.cache_bytes_hwm_shard = max(
+            st.cache_bytes_hwm_shard,
+            pool.byte_stats(self._bytes_per_page_shard)["bytes_in_use"])
         st.prefix_hits = pool.prefix_hits
 
     def _page_table_device(self):
@@ -994,8 +1231,8 @@ class ServingEngine:
         dst = np.zeros(width, np.int32)
         for i, (a, b) in enumerate(copies):
             src[i], dst[i] = a, b
-        self.caches = _copy_pages(self.caches, jnp.asarray(src),
-                                  jnp.asarray(dst))
+        self.caches = self._copy_pages_fn(self.caches, jnp.asarray(src),
+                                          jnp.asarray(dst))
 
     def _clamped_budget(self, req: Request, pos: int) -> int:
         """Clamp generation to cache capacity: decode writes at positions
@@ -1125,14 +1362,14 @@ class ServingEngine:
                     # their rows to the null sink instead of re-writing
                     dest = np.zeros(self.pool.pages_per_slot, np.int32)
                     dest[n_shared:len(pages)] = pages[n_shared:]
-                    self.caches = _scatter_pages(self.caches, cache1,
-                                                 jnp.asarray(dest),
-                                                 self.page_size)
-                    self.caches = _scatter_slot(self.caches, cache1, s,
-                                                skip_paged=True)
+                    self.caches = self._scatter_pages_fn(self.caches, cache1,
+                                                         jnp.asarray(dest))
+                    self.caches = self._scatter_slot_fn(self.caches, cache1,
+                                                        s, True)
                     self._update_cache_stats()
                 else:
-                    self.caches = _scatter_slot(self.caches, cache1, s)
+                    self.caches = self._scatter_slot_fn(self.caches, cache1,
+                                                        s, False)
                 self.index[s] = pos
                 self.budget[s] = budget
                 self.tokens[s, 0] = tok
@@ -1354,7 +1591,7 @@ class ServingEngine:
         width = self.pool.pages_per_slot * self.n_slots
         ids = np.zeros(width, np.int32)     # 0-pads hit the null page
         ids[:len(fresh)] = fresh
-        self.caches = _reset_page_scales(self.caches, jnp.asarray(ids))
+        self.caches = self._reset_scales_fn(self.caches, jnp.asarray(ids))
 
     def _admit_chunked(self):
         """Admission in scheduler mode: assign waiting requests to free
@@ -1467,9 +1704,7 @@ class ServingEngine:
                     batch["prefix"] = prefix
                 embeds = M.embed_prompt(self.cfg, self.opts, self.params,
                                         batch)
-                cache1 = (None if self.paged else
-                          M.init_caches(self.cfg, 1, self.max_seq,
-                                        jnp.float32, self.opts))
+                cache1 = None if self.paged else self._fresh_cache1()
                 req.prefill_skipped = n_skip
                 self.stats.prefill_skipped += n_skip
                 sched.start_task(PrefillTask(req=req, slot=s, total=total,
@@ -1576,7 +1811,8 @@ class ServingEngine:
         if self.paged:
             req.pages_used = len(self.pool.slot_pages[s])
         else:
-            self.caches = _scatter_slot(self.caches, task.cache1, s)
+            self.caches = self._scatter_slot_fn(self.caches, task.cache1, s,
+                                                False)
             task.cache1 = None
         self.index[s] = pos
         self.budget[s] = budget
@@ -1723,8 +1959,7 @@ def _scatter_slot(caches, cache1, slot: int, skip_paged: bool = False):
     return jax.tree_util.tree_map_with_path(scatter, caches)
 
 
-@functools.partial(jax.jit, static_argnames=("page_size",), donate_argnums=0)
-def _scatter_pages(caches, cache1, dest_pages, page_size: int):
+def _scatter_pages_impl(caches, cache1, dest_pages, page_size: int):
     """Scatter a batch-1 dense prefill cache into pool pages, quantizing on
     the way in when the pool stores int8/fp8 codes.
 
@@ -1787,8 +2022,15 @@ def _scatter_pages(caches, cache1, dest_pages, page_size: int):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-@functools.partial(jax.jit, donate_argnums=0)
-def _reset_page_scales(caches, page_ids):
+# jitted single-device entry points; the sharded engine wraps the raw impls
+# in shard_map instead (per-shard bodies are unchanged — the K axis of every
+# paged leaf is untouched by page scatter/copy/reset)
+_scatter_pages = functools.partial(
+    jax.jit, static_argnames=("page_size",),
+    donate_argnums=0)(_scatter_pages_impl)
+
+
+def _reset_page_scales_impl(caches, page_ids):
     """Zero the quantization-scale rows of ``page_ids`` (padded with 0 — the
     null page, harmless to reset). Run on pages entering a slot via decode
     growth, whose previous owner's scale rows would otherwise leak into the
@@ -1802,8 +2044,11 @@ def _reset_page_scales(caches, page_ids):
     return jax.tree_util.tree_map_with_path(reset, caches)
 
 
-@functools.partial(jax.jit, donate_argnums=0)
-def _copy_pages(caches, src_pages, dst_pages):
+_reset_page_scales = functools.partial(
+    jax.jit, donate_argnums=0)(_reset_page_scales_impl)
+
+
+def _copy_pages_impl(caches, src_pages, dst_pages):
     """Device-side page copies for copy-on-write: page dst <- page src for
     every pair (padding pairs are 0 -> 0, a null-page no-op)."""
     def copy(path, big):
@@ -1813,3 +2058,7 @@ def _copy_pages(caches, src_pages, dst_pages):
             return big.at[:, dst_pages].set(big[:, src_pages])
         return big.at[dst_pages].set(big[src_pages])
     return jax.tree_util.tree_map_with_path(copy, caches)
+
+
+_copy_pages = functools.partial(
+    jax.jit, donate_argnums=0)(_copy_pages_impl)

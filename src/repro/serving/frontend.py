@@ -294,9 +294,16 @@ class AsyncFrontend:
         ``replica{i}_spec_accept_per_pass``, and replicas that scored any
         deadlined request report the per-class SLO scoreboard
         (``replica{i}_deadline_attainment_realtime`` / ``_best_effort``
-        and ``replica{i}_preemptions_*`` counters). All values are floats,
-        the snapshot is safe to take before ``start()`` (gauges read zero),
-        and nothing here blocks on a tick."""
+        and ``replica{i}_preemptions_*`` counters); paged replicas report
+        cache gauges (``replica{i}_pages_in_use`` / ``_pages_hwm`` /
+        ``_cache_bytes_hwm``), and mesh-sharded replicas additionally their
+        axis sizes (``replica{i}_mesh_model``) and *per-device* figures
+        (``replica{i}_cache_bytes_hwm_shard`` / ``_pages_in_use_shard``) —
+        the summed ``cache_bytes_hwm`` is not a per-device number once the
+        pool is partitioned, and a scraper sizing HBM must read the shard
+        keys. All values are floats, the snapshot is safe to take before
+        ``start()`` (gauges read zero), and nothing here blocks on a
+        tick."""
         snap: Dict[str, float] = {}
         for k, v in self.stats.report().items():
             snap[f"frontend_{k}"] = float(v)
@@ -310,7 +317,8 @@ class AsyncFrontend:
             ph = eng.stats.phase_report()
             for k, v in ph.items():
                 if k.startswith(("deadline_attainment_", "deadline_total_",
-                                 "preemptions_")) \
+                                 "preemptions_", "pages_", "cache_bytes_",
+                                 "mesh_")) \
                         or k == "spec_accept_per_pass":
                     snap[f"replica{i}_{k}"] = float(v)
         return snap

@@ -117,6 +117,15 @@ class KVPool:
         """Pages needed to cover ``length`` positions (ceil division)."""
         return -(-length // self.page_size)
 
+    def byte_stats(self, bytes_per_page: int) -> dict:
+        """Page counts priced at a caller-supplied per-page byte cost. The
+        pool tracks page *indices* only and stays layout-blind: the engine
+        passes its global bytes-per-page for the summed figure and its
+        per-device bytes-per-page when the cache leaves are sharded across
+        an accelerator mesh — same pool, no layout knowledge here."""
+        return {"bytes_in_use": self.pages_in_use * bytes_per_page,
+                "bytes_hwm": self.pages_hwm * bytes_per_page}
+
     def slot_len_capacity(self, slot: int) -> int:
         """Positions the slot's currently-held pages can store; decode past
         this must ``ensure`` growth first or its write lands out of range."""

@@ -1,0 +1,140 @@
+"""Sharded multi-device serving: the GQA-atomic serving-rule table, mesh
+factory validation, and bit-equal engine streams on a 1xN CPU mesh.
+
+The e2e cases need >= 2 visible devices; under plain tier-1 (one CPU
+device) they skip and only the host-side rule/factory tests run. CI gives
+this file 8 fake CPU devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; the full
+mode x mesh matrix lives in ``benchmarks/sharded_bench.py`` — here we pin
+one sharded case and one replication-fallback case.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_params
+from repro.configs import get_config
+from repro.distributed.sharding import SERVING_RULES, serving_rules
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import Request, ServingEngine
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+
+# ---------------------------------------------------------------- rules
+
+def test_serving_rules_full_smollm_replicates():
+    # smollm-135m ships 9 query / 3 KV heads: neither 2 nor 4 divides 9,
+    # so the whole attention block must fall back to replication
+    cfg = get_config("smollm-135m")
+    assert (cfg.num_heads, cfg.num_kv_heads) == (9, 3)
+    for n in (2, 4):
+        rules = serving_rules(n, cfg.num_heads, cfg.num_kv_heads)
+        assert rules["heads"] is None
+        assert rules["kv_heads"] is None
+    rules = serving_rules(3, cfg.num_heads, cfg.num_kv_heads)
+    assert rules["heads"] == rules["kv_heads"] == "model"
+
+
+def test_serving_rules_gqa_atomic():
+    # query heads divisible but KV heads not (and vice versa) must NOT
+    # shard one side alone — the n // G group mapping would pair query
+    # heads with the wrong local KV head
+    assert serving_rules(4, 16, 9)["heads"] is None
+    assert serving_rules(4, 16, 9)["kv_heads"] is None
+    assert serving_rules(3, 16, 9)["heads"] is None
+    ok = serving_rules(2, 16, 8)
+    assert ok["heads"] == ok["kv_heads"] == "model"
+
+
+def test_serving_rules_reduced_smollm():
+    cfg, _ = reduced_params("smollm-135m")
+    assert serving_rules(2, cfg.num_heads, cfg.num_kv_heads)["kv_heads"] \
+        == "model"
+    assert serving_rules(4, cfg.num_heads, cfg.num_kv_heads)["kv_heads"] \
+        is None
+
+
+def test_serving_rules_keep_host_axes_replicated():
+    rules = serving_rules(2, 4, 2)
+    # batch/sequence axes never shard in serving: slots and pages are
+    # host-scheduler currency and every device must hold all of them
+    assert rules["batch"] is None
+    assert rules["kv_seq"] is None
+    assert SERVING_RULES["mlp"] == "model"
+
+
+# -------------------------------------------------------------- factory
+
+def test_serving_mesh_validates_sizes():
+    with pytest.raises(ValueError):
+        make_serving_mesh(0)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_serving_mesh(jax.device_count() + 1)
+
+
+@multi_device
+def test_serving_mesh_axis():
+    mesh = make_serving_mesh(2)
+    assert mesh.axis_names == ("model",)
+    assert mesh.shape["model"] == 2
+
+
+# ------------------------------------------------------------------ e2e
+
+def _stream(cfg, opts, params, mesh=None, **kw):
+    eng = ServingEngine(cfg, opts, params, n_slots=2, max_seq=64, eos=-999,
+                        fused=True, tick_tokens=4, mesh=mesh, **kw)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(Request(
+            uid=i,
+            prompt=rng.integers(2, 200, size=int(rng.integers(5, 20)),
+                                dtype=np.int64).astype(np.int32),
+            max_tokens=8))
+    done = eng.run(max_ticks=500)
+    assert len(done) == 4
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+@multi_device
+@pytest.mark.parametrize("kw", [{}, dict(paged=True, page_size=8)],
+                         ids=["dense", "paged"])
+def test_sharded_streams_bit_equal(opts, kw):
+    cfg, params = reduced_params("smollm-135m")
+    ref, _ = _stream(cfg, opts, params, **kw)
+    got, eng = _stream(cfg, opts, params, mesh=make_serving_mesh(2), **kw)
+    assert got == ref
+    assert dict(eng.stats.mesh_shape)["model"] == 2
+
+
+@multi_device
+def test_replication_fallback_bit_equal(opts):
+    # reduced smollm has 2 KV heads: model=4 cannot shard them, so the
+    # engine must serve with heads replicated — still bit-equal, and the
+    # honest per-shard accounting reports *full* cache bytes, not total/N
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices")
+    cfg, params = reduced_params("smollm-135m")
+    kw = dict(paged=True, page_size=8)
+    ref, _ = _stream(cfg, opts, params, **kw)
+    got, eng = _stream(cfg, opts, params, mesh=make_serving_mesh(4), **kw)
+    assert got == ref
+    assert eng.stats.cache_bytes_hwm_shard == eng.stats.cache_bytes_hwm
+
+
+@multi_device
+def test_sharded_cache_bytes_halve(opts):
+    # 4/2 heads over model=2 shard cleanly: each device owns half of
+    # every page, so the per-shard HWM is exactly half the summed figure
+    cfg, params = reduced_params("smollm-135m")
+    kw = dict(paged=True, page_size=8)
+    _, eng = _stream(cfg, opts, params, mesh=make_serving_mesh(2), **kw)
+    st = eng.stats
+    assert st.cache_bytes_hwm_shard * 2 == st.cache_bytes_hwm
+    rep = st.phase_report()
+    assert rep["mesh_model"] == 2.0
+    assert rep["cache_bytes_hwm_shard"] == float(st.cache_bytes_hwm_shard)
